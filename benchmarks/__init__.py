@@ -1,0 +1,10 @@
+# One benchmark module per paper table/figure:
+#   fig4_convergence        — Algorithm 2 convergence + source-error flip
+#   fig5_divergence_regimes — uniform / extreme / random divergence psi+alpha
+#   fig6_energy_sweep       — phi_E sweep: normalized energy + saved tx
+#   fig8_alpha_baselines    — target accuracy vs the 4 alpha-baselines
+#   fig9_psi_baselines      — target accuracy vs the 4 psi-baselines
+#                             (table1 = accuracy + energy from fig8/fig9)
+#   table2_bound_tightness  — LHS/RHS of Theorem 2 and Corollary 1
+#   roofline_table          — §Roofline terms from results/dryrun/*.json
+# ``python -m benchmarks.run`` executes the quick variants and prints CSV.

@@ -1,0 +1,70 @@
+"""Fig. 9 + Table I (psi half) — ST-LF's joint psi+alpha vs the four
+psi-baselines (random psi, heuristic-psi FedAvg/FADA, single matching)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import cached_round, quick_params
+from benchmarks.fig8_alpha_baselines import SETTINGS_FULL, SETTINGS_QUICK
+from repro.fl import baselines as bl
+from repro.fl import evaluate_assignment, run_stlf
+
+
+def run(quick: bool = True):
+    qp = quick_params(quick)
+    settings = SETTINGS_QUICK if quick else SETTINGS_FULL
+    rows = []
+    for setting in settings:
+        subset = [0, 1, 2, 3] if setting in ("M", "U") else None
+        accs = {}
+        energies = {}
+        for seed in qp["seeds"]:
+            state = cached_round(setting, num_devices=qp["num_devices"],
+                                 samples=qp["samples"], seed=seed,
+                                 train_iters=qp["train_iters"],
+                                 div_tau=qp["div_tau"], div_T=qp["div_T"],
+                                 label_subset=subset)
+            stlf = run_stlf(state, max_outer=4 if quick else 8,
+                            inner_steps=400 if quick else 1000)
+            rng = np.random.default_rng(seed + 7)
+            k = jax.random.PRNGKey(seed + 7)
+            rpsi = bl.random_psi(len(stlf.psi), rng)
+            hpsi = bl.heuristic_psi(state.clients)
+            methods = {
+                "ST-LF": stlf,
+                "Rnd-psi": evaluate_assignment(
+                    state, "Rnd-psi", rpsi, bl.rnd_alpha(rpsi, rng)),
+                "psi-FedAvg": evaluate_assignment(
+                    state, "psi-FedAvg", hpsi,
+                    bl.fedavg_alpha(hpsi, state.clients)),
+                "psi-FADA": evaluate_assignment(
+                    state, "psi-FADA", hpsi,
+                    bl.fada_alpha(hpsi, state.params, state.clients, k)),
+                "SM": evaluate_assignment(
+                    state, "SM", stlf.psi,
+                    bl.single_matching_alpha(stlf.psi, state.div_hat)),
+            }
+            for name, r in methods.items():
+                accs.setdefault(name, []).append(r.target_acc)
+                energies.setdefault(name, []).append(r.energy)
+        emax = max(np.mean(v) for v in energies.values()) or 1.0
+        for name in accs:
+            rows.append({
+                "bench": "fig9", "setting": setting, "method": name,
+                "target_acc": float(np.nanmean(accs[name])),
+                "norm_energy": float(np.mean(energies[name]) / emax),
+            })
+    return rows
+
+
+def main(quick: bool = True):
+    rows = run(quick)
+    for r in rows:
+        print(f"fig9,{r['setting']},{r['method']},"
+              f"acc={r['target_acc']:.3f},nrg={r['norm_energy']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

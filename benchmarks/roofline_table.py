@@ -1,0 +1,65 @@
+"""§Roofline — aggregate results/dryrun/*.json into the per-(arch x shape)
+three-term roofline table (single-pod mesh), with dominant bottleneck and
+usefulness ratio.  Run the dry-run sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(mesh: str = "16x16", rules: str = "default"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(p))
+        if r.get("mesh") == mesh and r.get("rules", "default") == rules:
+            recs.append(r)
+    return recs
+
+
+def run(quick: bool = True, mesh: str = "16x16", rules: str = "default"):
+    rows = []
+    for r in load_records(mesh, rules):
+        row = {"bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+               "mesh": r["mesh"], "status": r["status"]}
+        if r["status"] == "ok":
+            rl = r["roofline"]
+            row.update({
+                "compute_s": rl["compute_s"],
+                "memory_s": rl["memory_s"],
+                "collective_s": rl["collective_s"],
+                "dominant": rl["dominant"],
+                "usefulness": rl["usefulness"],
+                "fits_hbm": r.get("fits_hbm"),
+                "resident_gb": round(r.get("hbm_resident_bytes", 0) / 1e9,
+                                     1),
+            })
+        elif r["status"] == "skipped":
+            row["reason"] = r.get("reason", "")
+        rows.append(row)
+    return rows
+
+
+def main(quick: bool = True):
+    rows = run(quick)
+    print("arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+          "dominant,usefulness,resident_gb")
+    for r in rows:
+        if r["status"] == "ok":
+            print(f"{r['arch']},{r['shape']},{r['mesh']},ok,"
+                  f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+                  f"{r['collective_s']:.3e},{r['dominant']},"
+                  f"{r['usefulness']:.3f},{r['resident_gb']}")
+        else:
+            print(f"{r['arch']},{r['shape']},{r['mesh']},{r['status']},"
+                  f",,,,,")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Quickstart: ST-LF end to end on a small synthetic federated network.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a 6-device network over two visually distinct digit domains, runs
+the full ST-LF pipeline (local training -> Algorithm 1 divergence
+estimation -> optimization (P) -> source->target model transfer) and
+prints the resulting source/target split, link weights, target accuracy
+and communication energy, next to the FedAvg baseline.
+"""
+import jax
+import numpy as np
+
+from repro.data import build_network
+from repro.fl import prepare_round, run_stlf, evaluate_assignment
+from repro.fl import baselines as bl
+
+N_DEVICES = 6
+
+devices = build_network("M//MM", num_devices=N_DEVICES,
+                        samples_per_device=120, seed=0,
+                        label_subset=[0, 1, 2, 3])
+print(f"devices: {[d.n_labeled for d in devices]} labeled samples each")
+
+state = prepare_round(devices, jax.random.PRNGKey(0),
+                      train_iters=150, div_tau=2, div_T=15)
+print("empirical errors:", np.round(state.eps_hat, 2))
+print("divergence matrix (Algorithm 1):")
+print(np.round(state.div_hat, 2))
+
+stlf = run_stlf(state, max_outer=6, inner_steps=800)
+print("\nST-LF:")
+print("  psi (0=source, 1=target):", stlf.psi.astype(int))
+print("  alpha (link weights):")
+print(np.round(stlf.alpha, 2))
+print(f"  target accuracy: {stlf.target_acc:.3f}")
+print(f"  energy: {stlf.energy:.4f} (x{stlf.transmissions} transmissions)")
+
+fedavg = evaluate_assignment(state, "FedAvg", stlf.psi,
+                             bl.fedavg_alpha(stlf.psi, state.clients))
+print(f"\nFedAvg baseline: accuracy {fedavg.target_acc:.3f}, "
+      f"energy {fedavg.energy:.4f}")

@@ -1,0 +1,17 @@
+"""Batched KV-cache decoding example across three architecture families
+(dense GQA, attention-free RWKV6, hybrid Mamba2+shared-attention), using
+reduced configs so it runs on CPU in under a minute.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import sys
+
+from repro.launch import serve
+
+ARCHS = ["llama3.2-1b", "rwkv6-1.6b", "zamba2-7b"]
+
+if __name__ == "__main__":
+    for arch in ARCHS:
+        sys.argv = [sys.argv[0], "--arch", arch, "--smoke",
+                    "--batch", "2", "--prompt-len", "16", "--gen", "8"]
+        serve.main()

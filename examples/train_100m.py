@@ -1,0 +1,19 @@
+"""End-to-end driver: train the ~100M-param dense decoder for a few hundred
+steps on the synthetic LM stream, with checkpointing, through the exact
+pjit train_step the multi-pod dry-run lowers.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+(A single CPU device works; pass --devices 4 for a local 4-way
+data-parallel mesh.)
+"""
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "repro-100m",
+                "--steps", "300", "--batch", "4", "--seq", "256",
+                "--ckpt-dir", "ckpts/repro-100m",
+                "--log-every", "20"] + sys.argv[1:]
+    train.main()

@@ -1,0 +1,133 @@
+"""Regenerate the data-driven tables of EXPERIMENTS.md from
+results/dryrun, results/perf and results/bench."""
+import glob
+import json
+import os
+
+
+def load(pattern):
+    out = []
+    for p in sorted(glob.glob(pattern)):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out
+
+
+def fmt_s(x):
+    return f"{x:.3e}"
+
+
+def dryrun_table(mesh):
+    recs = [r for r in load("results/dryrun/*.json")
+            if r.get("mesh") == mesh and r.get("rules", "default") == "default"
+            and not r.get("tag")]
+    lines = ["| arch | shape | status | compile_s | flops/dev | bytes/dev | "
+             "coll bytes/dev | resident GB | fits 16GB |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] == "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} | "
+                f"{fmt_s(r['hlo_flops_per_device'])} | "
+                f"{fmt_s(r['hlo_bytes_per_device'])} | "
+                f"{fmt_s(r['collective_bytes_per_device'])} | "
+                f"{r['hbm_resident_bytes']/1e9:.1f} | "
+                f"{'yes' if r['fits_hbm'] else 'NO'} |")
+        else:
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                         f"— | — | — | — | — | — |")
+    return "\n".join(lines)
+
+
+def roofline_table():
+    recs = [r for r in load("results/dryrun/*.json")
+            if r.get("mesh") == "16x16"
+            and r.get("rules", "default") == "default" and not r.get("tag")]
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL_FLOPS | usefulness |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(rl['compute_s'])} | "
+            f"{fmt_s(rl['memory_s'])} | {fmt_s(rl['collective_s'])} | "
+            f"{rl['dominant']} | {fmt_s(rl['model_flops'])} | "
+            f"{rl['usefulness']:.3f} |")
+    return "\n".join(lines)
+
+
+def perf_table():
+    recs = load("results/perf/*.json")
+    lines = ["| tag | arch x shape | rules | overrides | compute s | "
+             "memory s | collective s | resident GB |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: r.get("tag", "")):
+        if r.get("status") != "ok":
+            lines.append(f"| {r.get('tag')} | — | — | — | error | | | |")
+            continue
+        rl = r["roofline"]
+        ov = ",".join(f"{k}={v}" for k, v in r.get("overrides", {}).items()) \
+            or "—"
+        lines.append(
+            f"| {r['tag']} | {r['arch']} x {r['shape']} | {r['rules']} | "
+            f"{ov} | {fmt_s(rl['compute_s'])} | {fmt_s(rl['memory_s'])} | "
+            f"{fmt_s(rl['collective_s'])} | "
+            f"{r['hbm_resident_bytes']/1e9:.1f} |")
+    return "\n".join(lines)
+
+
+def bench_tables():
+    out = []
+    for name in ("fig8", "fig9"):
+        path = f"results/bench/{name}.json"
+        if not os.path.exists(path):
+            continue
+        rows = json.load(open(path))
+        out.append(f"**{name}** (target accuracy / normalized energy):\n")
+        lines = ["| setting | method | target acc | norm energy |",
+                 "|---|---|---|---|"]
+        for r in rows:
+            lines.append(f"| {r['setting']} | {r['method']} | "
+                         f"{r['target_acc']:.3f} | {r['norm_energy']:.3f} |")
+        out.append("\n".join(lines) + "\n")
+    for name in ("table2",):
+        path = f"results/bench/{name}.json"
+        if not os.path.exists(path):
+            continue
+        rows = json.load(open(path))
+        out.append("**Table II** (bound tightness):\n")
+        lines = ["| setting | LHS (true target err) | RHS Thm2 | RHS Cor1 |",
+                 "|---|---|---|---|"]
+        for r in rows:
+            lines.append(f"| {r['setting']} | {r['lhs']:.3f} | "
+                         f"{r['rhs_thm2']:.3f} | {r['rhs_cor1']:.2f} |")
+        out.append("\n".join(lines) + "\n")
+    path = "results/bench/fig6.json"
+    if os.path.exists(path):
+        rows = json.load(open(path))
+        out.append("**Fig 6** (phi_E sweep):\n")
+        lines = ["| setting | phi_E | norm energy | saved tx |",
+                 "|---|---|---|---|"]
+        for r in rows:
+            lines.append(f"| {r['setting']} | {r['phi_e']} | "
+                         f"{r['norm_energy']:.3f} | {r['saved_tx']} |")
+        out.append("\n".join(lines) + "\n")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    os.makedirs("results/generated", exist_ok=True)
+    for name, fn in [
+        ("dryrun_16x16.md", lambda: dryrun_table("16x16")),
+        ("dryrun_2x16x16.md", lambda: dryrun_table("2x16x16")),
+        ("roofline.md", roofline_table),
+        ("perf.md", perf_table),
+        ("bench.md", bench_tables),
+    ]:
+        with open(f"results/generated/{name}", "w") as f:
+            f.write(fn())
+        print("wrote results/generated/" + name)

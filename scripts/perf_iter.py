@@ -1,0 +1,82 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: re-lower tagged variants of the three chosen
+(arch x shape) pairs and record roofline terms per iteration.
+
+    PYTHONPATH=src python scripts/perf_iter.py [iter_tag ...]
+"""
+import json     # noqa: E402
+import sys      # noqa: E402
+
+from repro.launch.dryrun import dryrun_one  # noqa: E402
+
+# (tag, arch, shape, rules, overrides)
+ITERATIONS = {
+    # ---- pair A: llama3.2-1b x train_4k (paper-representative:
+    #      link/collective-traffic minimization)
+    "A1_chunked": ("llama3.2-1b", "train_4k", "default",
+                   {"attention_impl": "chunked"}),
+    "A2_fsdp": ("llama3.2-1b", "train_4k", "fsdp",
+                {"attention_impl": "chunked"}),
+    "A2b_fsdp_xla": ("llama3.2-1b", "train_4k", "fsdp", {}),
+    "A3_fsdp_bf16": ("llama3.2-1b", "train_4k", "fsdp",
+                     {"param_dtype": "bfloat16"}),
+    # ---- pair B: grok-1-314b x train_4k (most collective-bound)
+    "B1_chunked": ("grok-1-314b", "train_4k", "default",
+                   {"attention_impl": "chunked"}),
+    "B2_bf16": ("grok-1-314b", "train_4k", "default",
+                {"attention_impl": "chunked", "param_dtype": "bfloat16"}),
+    "B3_moe_gather_fix": ("grok-1-314b", "train_4k", "default", {}),
+    "B4_moe_fix_bf16": ("grok-1-314b", "train_4k", "default",
+                        {"param_dtype": "bfloat16"}),
+    "B5_fsdp_bf16": ("grok-1-314b", "train_4k", "fsdp",
+                     {"param_dtype": "bfloat16"}),
+    "B6_fsdp_f32": ("grok-1-314b", "train_4k", "fsdp", {}),
+    # seq_parallel follow-ups on the other two pairs
+    "A4_seqp": ("llama3.2-1b", "train_4k", "seq_parallel", {}),
+    "C4_seqp_bf16": ("llama4-scout-17b-a16e", "prefill_32k", "seq_parallel",
+                     {"attention_impl": "chunked",
+                      "param_dtype": "bfloat16"}),
+    "C5_seqp_xla": ("llama4-scout-17b-a16e", "prefill_32k", "seq_parallel",
+                    {}),
+    # ---- bonus D: decode-residency / remat fixes
+    "D1_grok_decode_seqp": ("grok-1-314b", "decode_32k", "seq_parallel",
+                            {}),
+    "D2_minitron_decode_seqp": ("minitron-8b", "decode_32k", "seq_parallel",
+                                {}),
+    "D3_zamba_train_dots": ("zamba2-7b", "train_4k", "default",
+                            {"remat_policy": "dots_saveable"}),
+    # ---- pair C: llama4-scout x prefill_32k (worst roofline fraction)
+    "C1_chunked": ("llama4-scout-17b-a16e", "prefill_32k", "default",
+                   {"attention_impl": "chunked"}),
+    "C2_ep": ("llama4-scout-17b-a16e", "prefill_32k", "expert_parallel",
+              {"attention_impl": "chunked"}),
+    "C2s_seqp": ("llama4-scout-17b-a16e", "prefill_32k", "seq_parallel",
+                 {"attention_impl": "chunked"}),
+    "C3_ep_bf16": ("llama4-scout-17b-a16e", "prefill_32k",
+                   "expert_parallel",
+                   {"attention_impl": "chunked",
+                    "param_dtype": "bfloat16"}),
+}
+
+
+def main():
+    tags = sys.argv[1:] or list(ITERATIONS)
+    os.makedirs("results/perf", exist_ok=True)
+    for tag in tags:
+        arch, shape, rules, overrides = ITERATIONS[tag]
+        print(f"\n==== {tag}: {arch} x {shape} ({rules}, {overrides}) ====")
+        try:
+            rec = dryrun_one(arch, shape, rules=rules, overrides=overrides,
+                             tag=tag)
+        except Exception as e:  # noqa: BLE001
+            import traceback
+            traceback.print_exc()
+            rec = {"tag": tag, "status": "error", "error": str(e)}
+        with open(f"results/perf/{tag}.json", "w") as f:
+            json.dump(rec, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

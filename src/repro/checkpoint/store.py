@@ -1,0 +1,85 @@
+"""Pytree checkpointing on .npz (msgpack/orbax unavailable offline).
+
+Leaves are flattened with jax.tree_util key-paths as archive keys, so restore
+is structure-checked: the target tree supplies structure + dtypes + (when a
+mesh is given) shardings; arrays are device_put to the target sharding —
+i.e. sharding-aware restore for pjit-ed training states.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _keystr(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Any,
+                    metadata: Optional[dict] = None) -> str:
+    """Write ``<ckpt_dir>/step_<step>.npz`` atomically; returns the path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {_keystr(p): np.asarray(v) for p, v in flat}
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    if metadata is not None:
+        with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
+            json.dump(metadata, f, indent=2)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for fn in os.listdir(ckpt_dir)
+             if (m := re.fullmatch(r"step_(\d+)\.npz", fn))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, target: Any,
+                       step: Optional[int] = None,
+                       shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``target`` (arrays or ShapeDtypeStruct).
+
+    ``shardings``: optional pytree of NamedSharding matching ``target``;
+    every restored leaf is device_put to it (sharded restore).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        paths_and_leaves, treedef = jax.tree_util.tree_flatten_with_path(target)
+        shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                        if shardings is not None
+                        else [None] * len(paths_and_leaves))
+        out = []
+        for (p, leaf), shard in zip(paths_and_leaves, shard_leaves):
+            key = _keystr(p)
+            if key not in data:
+                raise KeyError(f"checkpoint {path} missing leaf {key}")
+            arr = data[key]
+            want_dtype = getattr(leaf, "dtype", arr.dtype)
+            want_shape = tuple(getattr(leaf, "shape", arr.shape))
+            if tuple(arr.shape) != want_shape:
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != target {want_shape}")
+            arr = arr.astype(want_dtype)
+            out.append(jax.device_put(arr, shard) if shard is not None
+                       else arr)
+    return jax.tree_util.tree_unflatten(treedef, out)

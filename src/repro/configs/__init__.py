@@ -1,0 +1,29 @@
+"""Architecture configs (assigned pool + paper's own CNN + repro-100m)."""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, MoEConfig, SSMConfig, HybridConfig, EncDecConfig,
+    FrontendStub, InputShape, INPUT_SHAPES, register, get_config, all_configs,
+)
+
+_LOADED = False
+
+_MODULES = [
+    "grok_1_314b", "granite_34b", "rwkv6_1p6b", "minitron_8b",
+    "llama3p2_1b", "gemma_7b", "seamless_m4t_large_v2",
+    "llama4_scout_17b_a16e", "zamba2_7b", "internvl2_2b", "repro_100m",
+]
+
+ASSIGNED = [
+    "grok-1-314b", "granite-34b", "rwkv6-1.6b", "minitron-8b",
+    "llama3.2-1b", "gemma-7b", "seamless-m4t-large-v2",
+    "llama4-scout-17b-a16e", "zamba2-7b", "internvl2-2b",
+]
+
+
+def load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    import importlib
+    for m in _MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    _LOADED = True

@@ -1,0 +1,15 @@
+"""ST-LF core: the paper's contribution.
+
+bounds.py      - measurable generalization-bound terms (Thm 2 / Cor 1, S_i, T_ij)
+divergence.py  - Algorithm 1: federated empirical H-divergence estimation
+energy.py      - D2D communication-energy model (Sec. V)
+gp.py          - monomial/posynomial machinery + AGM (Lemma 2) approximations
+problem.py     - problem (P) assembly from measurements
+solver.py      - Algorithm 2: successive-convex-approximation solver
+direct.py      - beyond-paper direct smooth relaxation (cross-check)
+baselines.py   - FedAvg / FADA-lite / Rnd-a / AvgD / Rnd-psi / SM baselines
+"""
+from repro.core.bounds import BoundTerms, source_term, target_term  # noqa
+from repro.core.energy import EnergyModel  # noqa
+from repro.core.problem import STLFProblem  # noqa
+from repro.core.solver import solve_stlf, SolverResult  # noqa

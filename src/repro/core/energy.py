@@ -1,0 +1,60 @@
+"""D2D communication-energy model (Sec. V, "Communication Energy
+Determination"): K_ij = (M / R_ij) * P_i with transmit power P_i ~
+U[23, 25] dBm, rate R_ij ~ U[63, 85] Mbps, hypothesis size M = 1 Gbit;
+E_ij(a) = K_ij * a / (a + eps_E) — the smooth 0/1 link-activation gate
+(eq. 14).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def dbm_to_watts(dbm: float) -> float:
+    return 10.0 ** ((dbm - 30.0) / 10.0)
+
+
+@dataclasses.dataclass
+class EnergyModel:
+    K: np.ndarray                 # (N, N) joules per activated link
+    eps_e: float = 1e-2
+
+    @classmethod
+    def sample(cls, n: int, rng: np.random.Generator, *,
+               p_min_dbm: float = 23.0, p_max_dbm: float = 25.0,
+               r_min: float = 63e6, r_max: float = 85e6,
+               model_bits: float = 1e9, eps_e: float = 1e-2,
+               unit_scale: float = 1e-3) -> "EnergyModel":
+        """``unit_scale``: K is expressed in kJ by default.  Calibration
+        note: with K in joules (~3.4 J/link) no link can ever pay for
+        itself under the paper's phi_T=5 (max accuracy benefit ~ 5*T <= a
+        few units), yet the paper's Fig. 6/7 show links active at phi_E=1
+        and only deactivating for phi_E in [1e2, 1e3] — consistent with an
+        effective per-link cost of ~3e-3 at phi_E=1.  kJ units reproduce
+        exactly that threshold structure (saturation at phi_E ~ 1e3)."""
+        p = dbm_to_watts(rng.uniform(p_min_dbm, p_max_dbm, size=n))   # (N,)
+        r = rng.uniform(r_min, r_max, size=(n, n))                    # (N,N)
+        k = (model_bits / r) * p[:, None] * unit_scale
+        np.fill_diagonal(k, 0.0)
+        return cls(K=k, eps_e=eps_e)
+
+    @classmethod
+    def for_tpu_links(cls, n: int, model_bytes: float,
+                      link_bw: float = 50e9, eps_e: float = 1e-2
+                      ) -> "EnergyModel":
+        """TPU-pod adaptation: the 'energy' of a source->target transfer is
+        its ICI collective cost, bytes / link_bw seconds (DESIGN.md §2)."""
+        k = np.full((n, n), model_bytes / link_bw)
+        np.fill_diagonal(k, 0.0)
+        return cls(K=k, eps_e=eps_e)
+
+    def energy(self, alpha: np.ndarray) -> float:
+        """Total network energy for link weights alpha (eq. 14 summed)."""
+        a = np.asarray(alpha, float)
+        return float(np.sum(self.K * a / (a + self.eps_e)))
+
+    def transmissions(self, alpha: np.ndarray, thresh: float = 1e-3) -> int:
+        a = np.asarray(alpha, float)
+        off = ~np.eye(a.shape[0], dtype=bool)
+        return int(np.sum((a > thresh) & off))

@@ -1,0 +1,320 @@
+"""Algorithm 2: successive-convex-approximation solver for (P).
+
+Each outer iteration linearizes every GP-violating posynomial denominator
+with the AGM monomial bound (Lemma 2 / eqs. 19-24, with the paper's App. H-2
+omission of the (70) hypothesis-comparison auxiliaries) around the previous
+iterate, producing a convex program in log variables, which we solve with a
+jit-compiled penalty + Adam inner loop (CVXPY is unavailable offline; see
+DESIGN.md — the outer SCA structure is exactly Algorithm 2).
+
+Constraint groups per iteration (log variables z, x = e^z):
+  G1 (each i):      1 <= F_hat_i(z),  F_i = psi_i + chiS_i / S_i          (86)
+  G2 (each i!=j):   T_ij <= H_hat_ij(z),
+                    H_ij = psi_i T_ij + chiT_ij psi_j^-1 a_ij^-1          (88)
+  G3 (each j):      sum_i a_ij <= M+_hat_j(z), M+_j = chiC_j+eps_C+psi_j  (89)
+  G4 (each j):      chiC_j + psi_j <= M-_hat_j(z) + eps_C, M-_j = sum a   (90)
+Objective (83): phiS sum chiS + phiT sum chiT + phiE sum K a / J_hat + sum chiC.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.gp import Monomial, Posynomial, pack_posynomial, pack_monomial
+from repro.core.problem import STLFProblem
+
+
+@dataclasses.dataclass
+class SolverResult:
+    psi: np.ndarray              # rounded {0,1}; 0 = source, 1 = target
+    alpha: np.ndarray            # masked + renormalized link weights
+    psi_relaxed: np.ndarray
+    alpha_relaxed: np.ndarray
+    objective_trace: List[float]
+    objective_parts: Dict[str, float]
+    converged: bool
+    outer_iters: int
+
+
+# ---------------------------------------------------------------- packing
+def _build_iteration(prob: STLFProblem, z0: np.ndarray):
+    """AGM-approximate every violating term around z0; pack to arrays."""
+    n, idx = prob.n, prob.idx
+    nv = idx.nvars
+
+    num_logc, num_E, den_logc, den_E = [], [], [], []
+
+    def add(num_p: Posynomial, den_terms: List[Tuple[float, np.ndarray]]):
+        lc, E = pack_posynomial(num_p, nv)
+        num_logc.append(lc); num_E.append(E)
+        dl = np.array([t[0] for t in den_terms])
+        dE = np.stack([t[1] for t in den_terms])
+        den_logc.append(dl); den_E.append(dE)
+
+    # G1: 1 <= F_hat_i
+    for i in range(n):
+        F = Posynomial.var(idx.psi[i]) + \
+            Posynomial.var(idx.chiS[i], coeff=1.0 / prob.S[i])
+        m = F.agm_monomial(z0)
+        add(Posynomial.const(1.0), [pack_monomial(m, nv)])
+
+    # G2: T_ij <= H_hat_ij
+    for i in range(n):
+        for j in range(n):
+            if i == j:
+                continue
+            H = Posynomial.var(idx.psi[i], coeff=prob.T[i, j]) + \
+                Posynomial([Monomial(0.0, {idx.chiT[i, j]: 1.0,
+                                           idx.psi[j]: -1.0,
+                                           idx.alpha[i, j]: -1.0})])
+            m = H.agm_monomial(z0)
+            add(Posynomial.const(max(prob.T[i, j], 1e-9)),
+                [pack_monomial(m, nv)])
+
+    # G3: sum_i a_ij <= M+_hat_j
+    for j in range(n):
+        col = Posynomial([Monomial(0.0, {idx.alpha[i, j]: 1.0})
+                          for i in range(n) if i != j])
+        Mp = Posynomial.var(idx.chiC[j]) + Posynomial.const(prob.eps_c) + \
+            Posynomial.var(idx.psi[j])
+        m = Mp.agm_monomial(z0)
+        add(col, [pack_monomial(m, nv)])
+
+    # G4: chiC_j + psi_j <= M-_hat_j + eps_C
+    for j in range(n):
+        num = Posynomial.var(idx.chiC[j]) + Posynomial.var(idx.psi[j])
+        Mm = Posynomial([Monomial(0.0, {idx.alpha[i, j]: 1.0})
+                         for i in range(n) if i != j])
+        m = Mm.agm_monomial(z0)
+        add(num, [pack_monomial(m, nv),
+                  (float(np.log(prob.eps_c)), np.zeros(nv))])
+
+    def ragged_pack(logcs, Es):
+        T = max(len(l) for l in logcs)
+        L = np.full((len(logcs), T), -1e30)
+        M = np.zeros((len(logcs), T, nv))
+        for g, (l, e) in enumerate(zip(logcs, Es)):
+            L[g, :len(l)] = l
+            M[g, :len(l)] = e
+        return jnp.asarray(L), jnp.asarray(M)
+
+    nl, nE = ragged_pack(num_logc, num_E)
+    dl, dE = ragged_pack(den_logc, den_E)
+
+    # Objective posynomial (83); energy denominators J_ij AGM'd around z0.
+    obj = Posynomial([])
+    for i in range(n):
+        obj = obj + Posynomial.var(idx.chiS[i], coeff=prob.phi_s)
+    for i in range(n):
+        for j in range(n):
+            if i != j:
+                obj = obj + Posynomial.var(idx.chiT[i, j], coeff=prob.phi_t)
+    for j in range(n):
+        obj = obj + Posynomial.var(idx.chiC[j])
+    for i in range(n):
+        for j in range(n):
+            if i == j or prob.energy.K[i, j] <= 0 or prob.phi_e <= 0:
+                continue
+            J = Posynomial.var(idx.alpha[i, j]) + \
+                Posynomial.const(prob.energy.eps_e)
+            jm = J.agm_monomial(z0)
+            # phiE * K * a / J_hat  — monomial
+            exps = {idx.alpha[i, j]: 1.0}
+            for k, p in jm.exps.items():
+                exps[k] = exps.get(k, 0.0) - p
+            obj = obj + Posynomial([Monomial(
+                float(np.log(prob.phi_e * prob.energy.K[i, j])) - jm.log_c,
+                exps)])
+    ol, oE = pack_posynomial(obj, nv)
+    return (nl, nE, dl, dE, jnp.asarray(ol), jnp.asarray(oE))
+
+
+# ---------------------------------------------------------------- inner
+@functools.partial(jax.jit, static_argnums=(7,))
+def _inner_solve(nl, nE, dl, dE, ol, oE, z0, steps, lo, hi, rho):
+    def obj_fn(z):
+        return jnp.sum(jnp.exp(ol + oE @ z))
+
+    def viol(z):
+        num = jax.nn.logsumexp(nl + jnp.einsum("gtv,v->gt", nE, z), axis=1)
+        den = jax.nn.logsumexp(dl + jnp.einsum("gtv,v->gt", dE, z), axis=1)
+        return jax.nn.relu(num - den)
+
+    def loss(z, r):
+        return obj_fn(z) + r * jnp.sum(jnp.square(viol(z))) \
+            + 10.0 * r * jnp.sum(viol(z))
+
+    lr = 0.02
+    b1, b2, eps = 0.9, 0.999, 1e-8
+
+    def step(carry, t):
+        z, m, v = carry
+        r = rho * (1.0 + 99.0 * t / steps)          # penalty ramp 1x -> 100x
+        g = jax.grad(loss)(z, r)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** (t + 1.0))
+        vh = v / (1 - b2 ** (t + 1.0))
+        z = z - lr * mh / (jnp.sqrt(vh) + eps)
+        z = jnp.clip(z, lo, hi)
+        return (z, m, v), None
+
+    init = (z0, jnp.zeros_like(z0), jnp.zeros_like(z0))
+    (z, _, _), _ = jax.lax.scan(step, init, jnp.arange(float(steps)))
+    return z, obj_fn(z), jnp.max(viol(z))
+
+
+# ------------------------------------------------------------- polish
+def _column_cost(prob: STLFProblem, j: int, col: np.ndarray) -> float:
+    """Objective contribution of target j's alpha column (terms d + e,
+    plus the unit chi^C equality-absorption penalty |sum(col) - 1|)."""
+    t = prob.phi_t * float(col @ prob.T[:, j])
+    e = prob.phi_e * float(np.sum(
+        prob.energy.K[:, j] * col / (col + prob.energy.eps_e)))
+    return t + e + abs(float(col.sum()) - 1.0)
+
+
+def _best_column(prob: STLFProblem, j: int, psi: np.ndarray,
+                 relaxed_col: Optional[np.ndarray] = None) -> np.ndarray:
+    """Best alpha column for target j among: one-hot best source, a
+    softmax spread over near-best sources, and the relaxed solver column.
+    Column-wise the objective separates, so this is exact over the
+    candidate set."""
+    n = prob.n
+    srcs = np.flatnonzero(psi == 0.0)
+    cands: List[np.ndarray] = []
+    # (Link-less targets are infeasible in (P): constraints (75)+(76)
+    # squeeze |sum_i alpha_ij - psi_j| <= eps_C with chi^C >= 0, so every
+    # target must receive ~unit total weight.)
+    if len(srcs) == 0:
+        return np.zeros(n)
+    cost = prob.phi_t * prob.T[srcs, j] + prob.phi_e * prob.energy.K[srcs, j]
+    one = np.zeros(n)
+    one[srcs[int(np.argmin(cost))]] = 1.0
+    cands.append(one)
+    tau = max(0.25 * float(np.std(prob.T[srcs, j])), 1e-3)
+    w = np.exp(-(prob.T[srcs, j] - prob.T[srcs, j].min()) / tau)
+    w[w < 0.05 * w.max()] = 0.0
+    sm = np.zeros(n)
+    sm[srcs] = w / w.sum()
+    cands.append(sm)
+    if relaxed_col is not None and relaxed_col[srcs].sum() > 1e-9:
+        rc = np.zeros(n)
+        rc[srcs] = relaxed_col[srcs] / relaxed_col[srcs].sum()
+        cands.append(rc)
+    return min(cands, key=lambda c: _column_cost(prob, j, c))
+
+
+def polish_assignment(prob: STLFProblem, psi: np.ndarray,
+                      alpha_relaxed: Optional[np.ndarray] = None,
+                      max_rounds: int = 4
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Greedy coordinate descent on the TRUE (un-relaxed) objective of (P):
+    rebuild every target's alpha column from candidates, then try flipping
+    each psi_i while all other coordinates stay at their conditional optima.
+    A beyond-paper robustification of Algorithm 2 — the relaxed SCA can
+    stall in the all-sources basin because uniform alpha prices targets at
+    the MEAN source bound (see EXPERIMENTS.md §Perf for the ablation)."""
+    n = prob.n
+    psi = np.asarray(psi, float).copy()
+
+    def alpha_for(psi_vec):
+        a = np.zeros((n, n))
+        for j in np.flatnonzero(psi_vec == 1.0):
+            rc = alpha_relaxed[:, j] if alpha_relaxed is not None else None
+            a[:, j] = _best_column(prob, j, psi_vec, rc)
+        return a
+
+    alpha = alpha_for(psi)
+    best = prob.objective(psi, alpha)["total"]
+    for _ in range(max_rounds):
+        improved = False
+        for i in range(n):
+            cand = psi.copy()
+            cand[i] = 1.0 - cand[i]
+            if not np.any(cand == 0.0):      # need >= 1 source
+                continue
+            a2 = alpha_for(cand)
+            obj = prob.objective(cand, a2)["total"]
+            if obj < best - 1e-9:
+                psi, alpha, best = cand, a2, obj
+                improved = True
+        if not improved:
+            break
+    return psi, alpha
+
+
+# ---------------------------------------------------------------- outer
+def solve_stlf(prob: STLFProblem, *, max_outer: int = 12,
+               inner_steps: int = 1500, tol: float = 1e-3,
+               rho: float = 50.0, link_threshold: float = 0.02,
+               polish: bool = True, verbose: bool = False) -> SolverResult:
+    n, idx = prob.n, prob.idx
+    x0 = prob.feasible_start()
+    z = np.log(np.maximum(x0, 1e-12))
+
+    lo = np.full(idx.nvars, np.log(1e-8))
+    hi = np.full(idx.nvars, np.log(1e4))
+    lo[idx.psi] = np.log(prob.eps_psi); hi[idx.psi] = 0.0
+    lo[idx.alpha.ravel()] = np.log(prob.eps_alpha)
+    hi[idx.alpha.ravel()] = 0.0
+
+    trace: List[float] = []
+    converged = False
+    it = 0
+    for it in range(max_outer):
+        packed = _build_iteration(prob, z)
+        z_new, obj, max_viol = _inner_solve(
+            *packed, jnp.asarray(z), inner_steps,
+            jnp.asarray(lo), jnp.asarray(hi), rho)
+        z_new = np.asarray(z_new)
+        trace.append(float(obj))
+        if verbose:
+            print(f"[stlf] outer {it}: obj={float(obj):.4f} "
+                  f"viol={float(max_viol):.2e}")
+        if it > 0 and abs(trace[-1] - trace[-2]) < tol * max(1.0, abs(trace[-2])):
+            z = z_new
+            converged = True
+            break
+        z = z_new
+
+    x = np.exp(z)
+    psi_rel = x[idx.psi]
+    alpha_rel = x[idx.alpha.ravel()].reshape(n, n)
+
+    # ---- rounding (documented deviation: paper is silent on its rounding)
+    psi = (psi_rel >= 0.5).astype(float)           # 1 = target
+    if np.all(psi == 1.0):                         # degenerate: no sources
+        if prob.phi_e * np.mean(prob.energy.K) < 1e3:   # keep best device
+            psi[int(np.argmin(prob.S))] = 0.0
+    if np.all(psi == 0.0):                         # degenerate: no targets
+        psi[int(np.argmax(prob.S))] = 1.0
+
+    alpha = alpha_rel.copy()
+    alpha[psi == 1.0, :] = 0.0                     # targets don't transmit
+    alpha[:, psi == 0.0] = 0.0                     # sources don't receive
+    np.fill_diagonal(alpha, 0.0)
+    alpha[alpha < link_threshold] = 0.0            # link deactivation
+    for j in range(n):
+        if psi[j] == 1.0:
+            c = alpha[:, j].sum()
+            if c > 1e-9:
+                alpha[:, j] /= c
+            else:                                   # fall back: best source
+                srcs = np.where(psi == 0.0)[0]
+                if len(srcs):
+                    alpha[srcs[int(np.argmin(prob.T[srcs, j]))], j] = 1.0
+
+    if polish:
+        psi, alpha = polish_assignment(prob, psi, alpha_rel)
+
+    return SolverResult(
+        psi=psi, alpha=alpha, psi_relaxed=psi_rel, alpha_relaxed=alpha_rel,
+        objective_trace=trace,
+        objective_parts=prob.objective(psi, alpha),
+        converged=converged, outer_iters=it + 1)

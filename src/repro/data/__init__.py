@@ -1,0 +1,9 @@
+from repro.data.digits import (  # noqa: F401
+    DOMAINS, IMAGE_SHAPE, NUM_CLASSES, DigitDataset, make_domain_dataset,
+    make_mixture, render_digit,
+)
+from repro.data.partition import (  # noqa: F401
+    DeviceData, assign_label_ratios, build_network, dirichlet_label_split,
+    iterate_minibatches,
+)
+from repro.data.lm_stream import LMStream, LMStreamConfig  # noqa: F401

@@ -1,0 +1,124 @@
+"""Federated data partitioning (Sec. V experimental setup).
+
+Devices receive non-i.i.d. Dirichlet label mixtures over a base dataset (or
+per-device domain assignments for the split setting), and each device is
+assigned a labeled-data ratio: half the network partially labeled with random
+ratios, the rest fully unlabeled — exactly the paper's protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.digits import DigitDataset, make_domain_dataset, make_mixture
+
+
+@dataclasses.dataclass
+class DeviceData:
+    images: np.ndarray          # (n_i, 28, 28, 3)
+    labels: np.ndarray          # (n_i,) int32; -1 where unlabeled
+    labeled_mask: np.ndarray    # (n_i,) bool
+    domain_ids: np.ndarray      # (n_i,) int32
+    true_labels: np.ndarray = None  # (n_i,) int32 — held out, eval only
+
+    @property
+    def n(self) -> int:
+        return len(self.labels)
+
+    @property
+    def n_labeled(self) -> int:
+        return int(self.labeled_mask.sum())
+
+
+def dirichlet_label_split(labels: np.ndarray, num_devices: int,
+                          alpha: float, rng: np.random.Generator
+                          ) -> List[np.ndarray]:
+    """Index sets per device with Dirichlet(alpha) per-class proportions."""
+    idx_by_class = [np.flatnonzero(labels == c) for c in np.unique(labels)]
+    device_idx: List[List[int]] = [[] for _ in range(num_devices)]
+    for idx in idx_by_class:
+        rng.shuffle(idx)
+        props = rng.dirichlet(np.full(num_devices, alpha))
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for dev, part in enumerate(np.split(idx, cuts)):
+            device_idx[dev].extend(part.tolist())
+    return [np.asarray(sorted(d)) for d in device_idx]
+
+
+def assign_label_ratios(num_devices: int, rng: np.random.Generator,
+                        frac_partially_labeled: float = 0.5,
+                        min_ratio: float = 0.3, max_ratio: float = 0.9
+                        ) -> np.ndarray:
+    """Per-device labeled ratios: the paper labels half the network with
+    random ratios and leaves the other half fully unlabeled."""
+    n_lab = int(round(num_devices * frac_partially_labeled))
+    ratios = np.zeros(num_devices)
+    which = rng.permutation(num_devices)[:n_lab]
+    ratios[which] = rng.uniform(min_ratio, max_ratio, size=n_lab)
+    return ratios
+
+
+def build_network(setting: str, num_devices: int = 10,
+                  samples_per_device: int = 600, seed: int = 0,
+                  dirichlet_alpha: float = 0.5,
+                  label_subset: Optional[Sequence[int]] = None
+                  ) -> List[DeviceData]:
+    """The paper's three dataset manipulations:
+
+      single: "M" | "U" | "MM"            (one domain, Dirichlet non-iid)
+      mixed:  "M+MM" etc.                 (every device mixes both domains)
+      split:  "M//U" etc.                 (each device draws ONE domain)
+    """
+    rng = np.random.default_rng(seed)
+    total = num_devices * samples_per_device
+
+    if "//" in setting:                       # split
+        domains = setting.split("//")
+        dev_domains = [domains[i % len(domains)] for i in range(num_devices)]
+        per_dev_sets = [
+            make_domain_dataset(dom, samples_per_device, seed + 101 * i,
+                                label_subset)
+            for i, dom in enumerate(dev_domains)]
+        parts = [(ds.images, ds.labels, ds.domain_ids) for ds in per_dev_sets]
+    else:
+        if "+" in setting:                    # mixed
+            domains = setting.split("+")
+            spec = {d: total // len(domains) for d in domains}
+            base = make_mixture(spec, seed, label_subset)
+        else:                                 # single
+            base = make_domain_dataset(setting, total, seed, label_subset)
+        splits = dirichlet_label_split(base.labels, num_devices,
+                                       dirichlet_alpha, rng)
+        parts = [(base.images[s], base.labels[s], base.domain_ids[s])
+                 for s in splits]
+
+    ratios = assign_label_ratios(num_devices, rng)
+    devices = []
+    for (imgs, labs, doms), ratio in zip(parts, ratios):
+        n = len(labs)
+        mask = np.zeros(n, bool)
+        k = int(round(ratio * n))
+        if k:
+            mask[rng.permutation(n)[:k]] = True
+        shown = np.where(mask, labs, -1).astype(np.int32)
+        devices.append(DeviceData(imgs.astype(np.float32), shown, mask,
+                                  doms.astype(np.int32),
+                                  labs.astype(np.int32)))
+    return devices
+
+
+def iterate_minibatches(x: np.ndarray, y: np.ndarray, batch: int,
+                        rng: np.random.Generator, iters: int):
+    """Yield ``iters`` shuffled minibatches (with reshuffling epochs)."""
+    n = len(y)
+    order = rng.permutation(n)
+    at = 0
+    for _ in range(iters):
+        if at + batch > n:
+            order = rng.permutation(n)
+            at = 0
+        sel = order[at:at + batch]
+        at += batch
+        yield x[sel], y[sel]

@@ -1,0 +1,11 @@
+from repro.fl.client import (  # noqa: F401
+    StackedClients, empirical_errors, init_client_params, stack_clients,
+    train_sources, true_accuracies,
+)
+from repro.fl.divergence import estimate_divergences  # noqa: F401
+from repro.fl.round import (  # noqa: F401
+    MethodResult, RoundState, evaluate_assignment, prepare_round,
+    run_all_baselines, run_stlf,
+)
+from repro.fl.transfer import apply_transfer, combine_models, \
+    column_normalize  # noqa: F401

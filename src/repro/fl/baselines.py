@@ -1,0 +1,174 @@
+"""The paper's eight comparison baselines (Sec. V-B).
+
+alpha-baselines (take psi as given, usually ST-LF's):
+  rnd_alpha       — Dirichlet-random link weights
+  fedavg_alpha    — weights ∝ source labeled-dataset size   [3]
+  fada_alpha      — adversarial alignability weighting      [8]-style
+  avg_degree      — ST-LF's average per-source degree, random links/weights
+
+psi-baselines (also choose psi):
+  rnd_psi         — random source/target split + rnd_alpha
+  psi_fedavg      — heuristic psi (labeled => source) + fedavg_alpha
+  psi_fada        — heuristic psi + fada_alpha
+  single_matching — one-to-one min-divergence matching      [34]-style
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl import cnn
+from repro.fl.client import StackedClients
+from repro.fl.transfer import column_normalize
+
+
+def heuristic_psi(clients: StackedClients) -> np.ndarray:
+    """Literature heuristic: any labeled data -> source (psi=0)."""
+    has_lab = np.asarray(jnp.any(clients.labeled, axis=1))
+    return np.where(has_lab, 0.0, 1.0)
+
+
+def random_psi(n: int, rng: np.random.Generator) -> np.ndarray:
+    psi = (rng.random(n) < 0.5).astype(float)
+    if psi.all():
+        psi[rng.integers(n)] = 0.0
+    if not psi.any():
+        psi[rng.integers(n)] = 1.0
+    return psi
+
+
+def rnd_alpha(psi: np.ndarray, rng: np.random.Generator) -> np.ndarray:
+    n = len(psi)
+    a = np.zeros((n, n))
+    srcs = np.flatnonzero(psi == 0.0)
+    for j in np.flatnonzero(psi == 1.0):
+        if len(srcs):
+            a[srcs, j] = rng.dirichlet(np.ones(len(srcs)))
+    return a
+
+
+def fedavg_alpha(psi: np.ndarray, clients: StackedClients) -> np.ndarray:
+    """FedAvg's data-size weighting, applied to labeled counts."""
+    n = len(psi)
+    sizes = np.asarray(jnp.sum(clients.labeled, axis=1), float)
+    a = np.zeros((n, n))
+    srcs = np.flatnonzero(psi == 0.0)
+    w = sizes[srcs]
+    w = w / max(w.sum(), 1e-9) if w.sum() > 0 else np.ones(len(srcs)) / max(len(srcs), 1)
+    for j in np.flatnonzero(psi == 1.0):
+        a[srcs, j] = w
+    return a
+
+
+def avg_degree_alpha(psi: np.ndarray, stlf_alpha: np.ndarray,
+                     rng: np.random.Generator) -> np.ndarray:
+    """Each source gets ST-LF's average number of links; destinations and
+    weights random."""
+    n = len(psi)
+    srcs = np.flatnonzero(psi == 0.0)
+    tgts = np.flatnonzero(psi == 1.0)
+    links = int((stlf_alpha > 1e-6).sum())
+    deg = max(1, int(round(links / max(len(srcs), 1))))
+    a = np.zeros((n, n))
+    for s in srcs:
+        dst = rng.permutation(tgts)[:min(deg, len(tgts))]
+        a[s, dst] = rng.random(len(dst)) + 0.1
+    return column_normalize(a, psi)
+
+
+def single_matching_alpha(psi: np.ndarray, div: np.ndarray) -> np.ndarray:
+    """SM: each target receives exactly one source — its min-divergence
+    match (greedy one-to-one until sources run out, then reuse)."""
+    n = len(psi)
+    a = np.zeros((n, n))
+    srcs = list(np.flatnonzero(psi == 0.0))
+    free = list(srcs)
+    for j in np.flatnonzero(psi == 1.0):
+        pool = free if free else srcs
+        best = pool[int(np.argmin([div[s, j] for s in pool]))]
+        a[best, j] = 1.0
+        if best in free:
+            free.remove(best)
+    return a
+
+
+# ------------------------------------------------------------- FADA-style
+@functools.partial(jax.jit, static_argnames=("iters", "batch", "lr"))
+def _domain_gap(feat_params_stack, clients: StackedClients, src_ids, tgt_ids,
+                key, *, iters: int, batch: int, lr: float):
+    """For each (source s, target t) pair: train a logistic discriminator on
+    the SOURCE model's frozen features to separate s-data from t-data; the
+    gap statistic 2(1-2 err) measures alignability (lower = more alignable),
+    matching FADA's dynamic-attention idea without its GAN apparatus."""
+    n_dev, n_max = clients.x.shape[0], clients.x.shape[1]
+    flat_x = jnp.reshape(clients.x, (n_dev * n_max,) + clients.x.shape[2:])
+
+    def one(s, t, k):
+        fp = jax.tree_util.tree_map(lambda a: a[s], feat_params_stack)
+        w = jnp.zeros((cnn.FC_HIDDEN, 2), jnp.float32)
+        b = jnp.zeros((2,), jnp.float32)
+
+        def disc_loss(wb, f, y):
+            w, b = wb
+            logits = f @ w + b
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - ll)
+
+        def step(carry, kt):
+            wb = carry
+            ks, ktt = jax.random.split(kt)
+            ri = jax.random.randint(ks, (batch,), 0, clients.counts[s])
+            rj = jax.random.randint(ktt, (batch,), 0, clients.counts[t])
+            xs = flat_x[s * n_max + ri]
+            xt = flat_x[t * n_max + rj]
+            f = cnn.cnn_features(fp, jnp.concatenate([xs, xt]))
+            y = jnp.concatenate([jnp.zeros(batch, jnp.int32),
+                                 jnp.ones(batch, jnp.int32)])
+            g = jax.grad(disc_loss)((carry[0], carry[1]), f, y)
+            return (wb[0] - lr * g[0], wb[1] - lr * g[1]), None
+
+        (w, b), _ = jax.lax.scan(step, (w, b), jax.random.split(k, iters))
+
+        row = jnp.arange(n_max)
+
+        def err(d, lab):
+            f = cnn.cnn_features(fp, flat_x[d * n_max + row])
+            pred = jnp.argmax(f @ w + b, axis=-1)
+            valid = row < clients.counts[d]
+            return jnp.sum(jnp.logical_and(valid, pred != lab)), \
+                jnp.sum(valid)
+
+        ws_, ns_ = err(s, 0)
+        wt_, nt_ = err(t, 1)
+        eps = (ws_ + wt_) / jnp.maximum(ns_ + nt_, 1)
+        return jnp.clip(2.0 * (1.0 - 2.0 * eps), 0.0, 2.0)
+
+    keys = jax.random.split(key, src_ids.shape[0])
+    return jax.vmap(one)(src_ids, tgt_ids, keys)
+
+
+def fada_alpha(psi: np.ndarray, params_stack, clients: StackedClients,
+               key, *, iters: int = 40, batch: int = 16,
+               lr: float = 0.05) -> np.ndarray:
+    n = len(psi)
+    srcs = np.flatnonzero(psi == 0.0)
+    tgts = np.flatnonzero(psi == 1.0)
+    if len(srcs) == 0 or len(tgts) == 0:
+        return np.zeros((n, n))
+    ss, tt = np.meshgrid(srcs, tgts, indexing="ij")
+    gaps = _domain_gap(params_stack, clients, jnp.asarray(ss.ravel()),
+                       jnp.asarray(tt.ravel()), key,
+                       iters=iters, batch=batch, lr=lr)
+    gaps = np.asarray(gaps).reshape(len(srcs), len(tgts))
+    a = np.zeros((n, n))
+    # dynamic attention: softmax over sources of negative gap
+    w = np.exp(-2.0 * gaps)
+    w = w / w.sum(axis=0, keepdims=True)
+    for bi, j in enumerate(tgts):
+        a[srcs, j] = w[:, bi]
+    return a

@@ -1,0 +1,88 @@
+"""The paper's client model (Sec. V): a 2-layer CNN (10 and 20 maps)
+followed by two fully-connected layers, in pure JAX (lax.conv).  The same
+architecture with a 2-dim output head is the Algorithm-1 domain classifier.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec, materialize
+
+FC_HIDDEN = 128
+
+
+def cnn_specs(num_classes: int = 10, in_ch: int = 3) -> Dict[str, ParamSpec]:
+    # 28 -> conv5 -> 24 -> pool2 -> 12 -> conv5 -> 8 -> pool2 -> 4
+    flat = 20 * 4 * 4
+    return {
+        "conv1": ParamSpec((5, 5, in_ch, 10), (None, None, None, None)),
+        "b1": ParamSpec((10,), (None,), init="zeros"),
+        "conv2": ParamSpec((5, 5, 10, 20), (None, None, None, None)),
+        "b2": ParamSpec((20,), (None,), init="zeros"),
+        "fc1": ParamSpec((flat, FC_HIDDEN), (None, None)),
+        "fcb1": ParamSpec((FC_HIDDEN,), (None,), init="zeros"),
+        "fc2": ParamSpec((FC_HIDDEN, num_classes), (None, None)),
+        "fcb2": ParamSpec((num_classes,), (None,), init="zeros"),
+    }
+
+
+def cnn_init(key, num_classes: int = 10, in_ch: int = 3):
+    return materialize(cnn_specs(num_classes, in_ch), key)
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(params, x):
+    """x: (B, 28, 28, C) float32 -> logits (B, num_classes)."""
+    dn = jax.lax.conv_dimension_numbers(x.shape, params["conv1"].shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    h = jax.lax.conv_general_dilated(x, params["conv1"], (1, 1), "VALID",
+                                     dimension_numbers=dn)
+    h = _pool2(jax.nn.relu(h + params["b1"]))
+    dn2 = jax.lax.conv_dimension_numbers(h.shape, params["conv2"].shape,
+                                         ("NHWC", "HWIO", "NHWC"))
+    h = jax.lax.conv_general_dilated(h, params["conv2"], (1, 1), "VALID",
+                                     dimension_numbers=dn2)
+    h = _pool2(jax.nn.relu(h + params["b2"]))
+    h = jnp.reshape(h, (h.shape[0], -1))
+    h = jax.nn.relu(h @ params["fc1"] + params["fcb1"])
+    return h @ params["fc2"] + params["fcb2"]
+
+
+def cnn_features(params, x):
+    """Penultimate features (B, FC_HIDDEN) — used by the FADA-style baseline
+    and by transformer-client divergence heads."""
+    dn = jax.lax.conv_dimension_numbers(x.shape, params["conv1"].shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    h = jax.lax.conv_general_dilated(x, params["conv1"], (1, 1), "VALID",
+                                     dimension_numbers=dn)
+    h = _pool2(jax.nn.relu(h + params["b1"]))
+    dn2 = jax.lax.conv_dimension_numbers(h.shape, params["conv2"].shape,
+                                         ("NHWC", "HWIO", "NHWC"))
+    h = jax.lax.conv_general_dilated(h, params["conv2"], (1, 1), "VALID",
+                                     dimension_numbers=dn2)
+    h = _pool2(jax.nn.relu(h + params["b2"]))
+    h = jnp.reshape(h, (h.shape[0], -1))
+    return jax.nn.relu(h @ params["fc1"] + params["fcb1"])
+
+
+def xent_loss(params, x, y):
+    logits = cnn_forward(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(logz - ll)
+
+
+def accuracy(params, x, y, mask=None):
+    pred = jnp.argmax(cnn_forward(params, x), axis=-1)
+    hit = (pred == y).astype(jnp.float32)
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(hit * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(hit)

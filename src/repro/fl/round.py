@@ -1,0 +1,129 @@
+"""End-to-end ST-LF round orchestration (Fig. 2 pipeline) + evaluation of
+any (psi, alpha) assignment — shared by ST-LF and all eight baselines.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bounds import BoundTerms
+from repro.core.energy import EnergyModel
+from repro.core.problem import STLFProblem
+from repro.core.solver import SolverResult, solve_stlf
+from repro.data.partition import DeviceData
+from repro.fl import baselines as bl
+from repro.fl.client import (StackedClients, empirical_errors,
+                             init_client_params, stack_clients,
+                             train_sources, true_accuracies)
+from repro.fl.divergence import estimate_divergences
+from repro.fl.transfer import apply_transfer, column_normalize
+
+
+@dataclasses.dataclass
+class RoundState:
+    """Everything measured once per network, reused across methods."""
+    clients: StackedClients
+    params: object               # locally-trained per-device params
+    eps_hat: np.ndarray          # (N,)
+    div_hat: np.ndarray          # (N, N) Algorithm-1 estimates
+    energy: EnergyModel
+    bounds: BoundTerms
+
+
+@dataclasses.dataclass
+class MethodResult:
+    name: str
+    psi: np.ndarray
+    alpha: np.ndarray
+    target_acc: float            # mean ground-truth accuracy at targets
+    per_device_acc: np.ndarray
+    energy: float
+    transmissions: int
+    solver: Optional[SolverResult] = None
+
+
+def prepare_round(devices: List[DeviceData], key, *,
+                  train_iters: int = 100, train_batch: int = 10,
+                  train_lr: float = 0.01, div_tau: int = 4, div_T: int = 25,
+                  energy: Optional[EnergyModel] = None,
+                  energy_seed: int = 0, delta: float = 0.05) -> RoundState:
+    clients = stack_clients(devices)
+    n = clients.n_devices
+    k_init, k_train, k_div = jax.random.split(key, 3)
+    params = init_client_params(n, k_init)
+    params = train_sources(params, clients, jax.random.split(k_train, n),
+                           iters=train_iters, batch=train_batch, lr=train_lr)
+    eps = np.asarray(empirical_errors(params, clients))
+    div = estimate_divergences(clients, k_div, tau=div_tau, T=div_T,
+                               batch=train_batch, lr=train_lr)
+    if energy is None:
+        energy = EnergyModel.sample(n, np.random.default_rng(energy_seed))
+    bounds = BoundTerms(eps_hat=eps,
+                        n_data=np.asarray(clients.counts),
+                        div_hat=div, delta=delta)
+    return RoundState(clients, params, eps, div, energy, bounds)
+
+
+def evaluate_assignment(state: RoundState, name: str, psi: np.ndarray,
+                        alpha: np.ndarray,
+                        solver: Optional[SolverResult] = None
+                        ) -> MethodResult:
+    alpha = column_normalize(alpha, psi)
+    mixed = apply_transfer(state.params, jnp.asarray(alpha),
+                           jnp.asarray(psi))
+    acc = np.asarray(true_accuracies(mixed, state.clients))
+    tgts = np.flatnonzero(psi == 1.0)
+    t_acc = float(acc[tgts].mean()) if len(tgts) else float("nan")
+    return MethodResult(
+        name=name, psi=np.asarray(psi, float), alpha=alpha,
+        target_acc=t_acc, per_device_acc=acc,
+        energy=state.energy.energy(alpha),
+        transmissions=state.energy.transmissions(alpha),
+        solver=solver)
+
+
+def run_stlf(state: RoundState, *, phi_s: float = 1.0, phi_t: float = 5.0,
+             phi_e: float = 1.0, **solver_kw) -> MethodResult:
+    prob = STLFProblem(state.bounds, state.energy,
+                       phi_s=phi_s, phi_t=phi_t, phi_e=phi_e)
+    res = solve_stlf(prob, **solver_kw)
+    return evaluate_assignment(state, "ST-LF", res.psi, res.alpha, res)
+
+
+def run_all_baselines(state: RoundState, stlf: MethodResult, key,
+                      seed: int = 0) -> Dict[str, MethodResult]:
+    """Evaluate the four alpha-baselines (on ST-LF's psi) and the four
+    psi-baselines, exactly the paper's comparison matrix."""
+    rng = np.random.default_rng(seed)
+    psi = stlf.psi
+    out: Dict[str, MethodResult] = {}
+
+    k1, k2 = jax.random.split(key)
+    # ---- alpha-baselines (ST-LF's psi)
+    out["Rnd-alpha"] = evaluate_assignment(
+        state, "Rnd-alpha", psi, bl.rnd_alpha(psi, rng))
+    out["FedAvg"] = evaluate_assignment(
+        state, "FedAvg", psi, bl.fedavg_alpha(psi, state.clients))
+    out["FADA"] = evaluate_assignment(
+        state, "FADA", psi,
+        bl.fada_alpha(psi, state.params, state.clients, k1))
+    out["AvgD"] = evaluate_assignment(
+        state, "AvgD", psi, bl.avg_degree_alpha(psi, stlf.alpha, rng))
+
+    # ---- psi-baselines
+    rpsi = bl.random_psi(len(psi), rng)
+    out["Rnd-psi"] = evaluate_assignment(
+        state, "Rnd-psi", rpsi, bl.rnd_alpha(rpsi, rng))
+    hpsi = bl.heuristic_psi(state.clients)
+    out["psi-FedAvg"] = evaluate_assignment(
+        state, "psi-FedAvg", hpsi, bl.fedavg_alpha(hpsi, state.clients))
+    out["psi-FADA"] = evaluate_assignment(
+        state, "psi-FADA", hpsi,
+        bl.fada_alpha(hpsi, state.params, state.clients, k2))
+    out["SM"] = evaluate_assignment(
+        state, "SM", psi, bl.single_matching_alpha(psi, state.div_hat))
+    return out

@@ -1,0 +1,59 @@
+"""Source -> target model transfer: h_t = sum_s alpha[s, t] h_s.
+
+On a pod this is the sparse weighted gather along the client-sharded axis
+(GSPMD lowers the einsum to all-gather / reduce-scatter / collective-permute
+chains depending on alpha's sparsity); the ST-LF energy term prices exactly
+this traffic.  The inner flattened weighted-combine is also available as a
+Pallas kernel (kernels/alpha_combine) for the HBM-bound many-clients case.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def combine_models(params_stack, alpha, *, impl: str = "xla"):
+    """params_stack: pytree with leading device axis N; alpha: (N, N)
+    column-stochastic over targets (alpha[s, t]).  Returns the same pytree
+    where entry t = sum_s alpha[s, t] * params[s].  Rows of sources are
+    untouched targets' mixtures; callers select which rows to keep."""
+    alpha = jnp.asarray(alpha, jnp.float32)
+    if impl == "pallas":
+        from repro.kernels.alpha_combine import ops as ac_ops
+        return ac_ops.alpha_combine_tree(params_stack, alpha)
+    return jax.tree_util.tree_map(
+        lambda p: jnp.einsum("s...,st->t...", p.astype(jnp.float32),
+                             alpha).astype(p.dtype), params_stack)
+
+
+def apply_transfer(params_stack, alpha, psi):
+    """Targets (psi=1) receive their alpha-mixture; sources keep their own
+    locally-trained parameters."""
+    mixed = combine_models(params_stack, alpha)
+    psi = jnp.asarray(psi, jnp.float32)
+
+    def sel(own, mix):
+        shape = (-1,) + (1,) * (own.ndim - 1)
+        m = jnp.reshape(psi, shape).astype(own.dtype)
+        return own * (1 - m) + mix * m
+
+    return jax.tree_util.tree_map(sel, params_stack, mixed)
+
+
+def column_normalize(alpha: np.ndarray, psi: np.ndarray) -> np.ndarray:
+    """Project raw link weights onto (P)'s feasible set: zero rows for
+    targets / columns for sources, unit column sums at targets."""
+    a = np.array(alpha, float)
+    a[psi == 1.0, :] = 0.0
+    a[:, psi == 0.0] = 0.0
+    np.fill_diagonal(a, 0.0)
+    for j in np.flatnonzero(psi == 1.0):
+        c = a[:, j].sum()
+        if c > 1e-12:
+            a[:, j] /= c
+        else:
+            srcs = np.flatnonzero(psi == 0.0)
+            if len(srcs):
+                a[srcs[0], j] = 1.0
+    return a

@@ -1,0 +1,15 @@
+# Pallas TPU kernels for the framework's compute hot spots, each shipped as
+#   <name>/kernel.py  — pl.pallas_call body + BlockSpec VMEM tiling
+#   <name>/ops.py     — jit'd public wrapper (auto interpret=True on CPU)
+#   <name>/ref.py     — pure-jnp oracle the tests assert against
+#
+# flash_attention : causal / sliding-window GQA attention (dense archs)
+# ssm_scan        : chunked gated-linear-attention (rwkv6 / mamba2 family)
+# disagreement    : pairwise prediction-disagreement matrix (Algorithm 1 /
+#                   hypothesis-combination-noise hot spot)
+# alpha_combine   : weighted source->target parameter mixing (ST-LF transfer)
+#
+# The paper itself contributes no custom kernel (its contribution is the
+# network-optimization layer); these cover the hot spots of the substrate
+# the technique runs on (attention / recurrent scan) and of ST-LF's own
+# measurement / transfer phases (disagreement / alpha_combine).

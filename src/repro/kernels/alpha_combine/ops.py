@@ -1,0 +1,34 @@
+"""Public wrappers: flat and pytree alpha-combine."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.alpha_combine.kernel import alpha_combine_flat
+from repro.nn.param import flatten_to_vector, unflatten_from_vector
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def alpha_combine(theta, alpha, *, interpret: Optional[bool] = None):
+    """theta: (S, P); alpha: (S, T) -> (T, P)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return alpha_combine_flat(theta, alpha, interpret=interpret)
+
+
+def alpha_combine_tree(params_stack, alpha, *,
+                       interpret: Optional[bool] = None):
+    """Pytree with leading device axis -> same pytree, mixed columns."""
+    if interpret is None:
+        interpret = _on_cpu()
+    s = alpha.shape[0]
+    flat = jax.vmap(flatten_to_vector)(params_stack)      # (S, P)
+    mixed = alpha_combine_flat(flat, jnp.asarray(alpha, jnp.float32),
+                               interpret=interpret)       # (T, P)
+    like = jax.tree_util.tree_map(lambda a: a[0], params_stack)
+    return jax.vmap(lambda v: unflatten_from_vector(v, like))(mixed)

@@ -1,0 +1,11 @@
+"""Oracle for the weighted source->target parameter mix:
+out[t, p] = sum_s alpha[s, t] * theta[s, p]."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def alpha_combine_ref(theta, alpha):
+    """theta: (S, P) float; alpha: (S, T) -> (T, P) float32."""
+    return jnp.einsum("sp,st->tp", theta.astype(jnp.float32),
+                      alpha.astype(jnp.float32))

@@ -1,0 +1,26 @@
+"""Public wrapper: normalized pairwise disagreement matrix."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.disagreement.kernel import disagreement_counts
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def disagreement(preds, valid=None, *, interpret: Optional[bool] = None):
+    """preds: (N, M) int; valid: (M,) bool/float or None -> (N, N) f32."""
+    if interpret is None:
+        interpret = _on_cpu()
+    n, m = preds.shape
+    if valid is None:
+        valid = jnp.ones((m,), jnp.float32)
+    counts = disagreement_counts(preds.astype(jnp.int32),
+                                 valid.astype(jnp.float32),
+                                 interpret=interpret)
+    return counts / jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)

@@ -1,0 +1,20 @@
+"""Oracle: pairwise prediction-disagreement matrix.
+
+D[i, j] = (1/|valid|) sum_m valid[m] * [preds[i, m] != preds[j, m]]
+— eq. (4)'s empirical hypothesis-difference error evaluated for every
+hypothesis pair on a shared dataset (the Algorithm-1 / hypothesis-
+combination-noise hot spot: N^2 * M comparisons).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def disagreement_ref(preds, valid=None):
+    """preds: (N, M) int; valid: (M,) bool or None.  -> (N, N) float32."""
+    n, m = preds.shape
+    neq = (preds[:, None, :] != preds[None, :, :]).astype(jnp.float32)
+    if valid is not None:
+        v = valid.astype(jnp.float32)
+        return (neq * v[None, None, :]).sum(-1) / jnp.maximum(v.sum(), 1.0)
+    return neq.mean(-1)

@@ -1,0 +1,53 @@
+"""Public jit'd wrapper: (B, S, H, D) GQA-repeated attention with padding
+to block multiples and automatic interpret=True on CPU."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import (DEFAULT_BLOCK_K,
+                                                  DEFAULT_BLOCK_Q,
+                                                  flash_attention_bhsd)
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: Optional[bool] = None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, H, D) with H already GQA-repeated.
+
+    Pads Sq/Sk up to block multiples; padded keys sit at positions > every
+    real query so the causal mask hides them (for the non-causal path they
+    are masked through a window covering exactly the real keys).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    bq = min(block_q, max(16, sq))
+    bk = min(block_k, max(16, sk))
+
+    pad_q = (-sq) % bq
+    pad_k = (-sk) % bk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    def to_bhsd(x):
+        return jnp.reshape(jnp.swapaxes(x, 1, 2),
+                           (b * h, x.shape[1], d))
+
+    o = flash_attention_bhsd(to_bhsd(qp), to_bhsd(kp), to_bhsd(vp),
+                             causal=causal, window=window,
+                             offset=sk - sq, valid_k=sk,
+                             block_q=bq, block_k=bk, interpret=interpret)
+    o = jnp.swapaxes(jnp.reshape(o, (b, h, sq + pad_q, d)), 1, 2)
+    return o[:, :sq]

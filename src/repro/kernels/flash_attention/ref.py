@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for flash attention (causal / sliding-window)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e9
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jax.Array:
+    """q: (B, Sq, H, D); k, v: (B, Sk, H, D) (heads already repeated for
+    GQA).  Keys are assumed aligned so query i sits at absolute position
+    i + (Sk - Sq).  fp32 softmax, output in v.dtype."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    qi = jnp.arange(sq)[:, None] + (sk - sq)
+    kj = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask = kj <= qi
+    if window is not None:
+        mask = jnp.logical_and(mask, kj > qi - window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32)
+                      ).astype(v.dtype)

@@ -1,0 +1,50 @@
+"""Public jit'd wrapper matching nn.linear_attn.gla_chunked's signature."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import gla_chunked_bhncd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def gla_chunked(q, k, v, log_w, *, chunk: int, variant: str = "mamba",
+                bonus: Optional[jax.Array] = None,
+                initial_state: Optional[jax.Array] = None,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """q,k,log_w: (B, L, H, Dk); v: (B, L, H, Dv).
+    Returns (y (B, L, H, Dv), final_state (B, H, Dk, Dv))."""
+    if interpret is None:
+        interpret = _on_cpu()
+    b, l, h, dk = q.shape
+    dv = v.shape[-1]
+    orig_l = l
+    if l % chunk:
+        pad = chunk - l % chunk
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))  # noqa: E731
+        q, k, v, log_w = zpad(q), zpad(k), zpad(v), zpad(log_w)
+        l += pad
+    n = l // chunk
+
+    def to_bhncd(x, d):
+        x = jnp.swapaxes(x, 1, 2)                     # (B, H, L, D)
+        return jnp.reshape(x, (b * h, n, chunk, d))
+
+    if bonus is None:
+        bonus = jnp.zeros((h, dk), jnp.float32)
+    s0 = (jnp.zeros((b * h, dk, dv), jnp.float32) if initial_state is None
+          else jnp.reshape(initial_state.astype(jnp.float32),
+                           (b * h, dk, dv)))
+    y, sfin = gla_chunked_bhncd(
+        to_bhncd(q, dk), to_bhncd(k, dk), to_bhncd(v, dv),
+        to_bhncd(log_w, dk), bonus, s0,
+        chunk=chunk, variant=variant, num_heads=h, interpret=interpret)
+    y = jnp.reshape(y, (b, h, l, dv))
+    y = jnp.swapaxes(y, 1, 2)[:, :orig_l]
+    return y.astype(v.dtype), jnp.reshape(sfin, (b, h, dk, dv))

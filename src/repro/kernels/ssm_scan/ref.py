@@ -1,0 +1,7 @@
+"""Oracle for the chunked GLA / WKV scan — delegates to the shared pure-jnp
+implementation in nn.linear_attn (the model code and the kernel share one
+algorithm; the tests assert the Pallas kernel against this)."""
+from __future__ import annotations
+
+from repro.nn.linear_attn import gla_chunked as gla_chunked_ref  # noqa: F401
+from repro.nn.linear_attn import gla_decode as gla_decode_ref    # noqa: F401

@@ -1,0 +1,180 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination with abstract inputs (no allocation), record
+memory_analysis() / cost_analysis() / parsed collective traffic, and emit
+the roofline terms.
+
+The two lines above MUST stay the first statements in this module — jax
+locks the device count on first init.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+        --shape train_4k [--multi-pod] [--rules default] [--out results/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs import ASSIGNED, INPUT_SHAPES, get_config  # noqa: E402
+from repro.launch.hlo import analyze_hlo  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import derive_roofline  # noqa: E402
+from repro.launch.steps import make_bundle  # noqa: E402
+from repro.nn.sharding import RULE_SETS  # noqa: E402
+
+
+def skip_reason(cfg, shape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context:
+        return ("no sub-quadratic path: enc-dec cross-attention over the "
+                "full 524k memory (see DESIGN.md §4)")
+    return None
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               rules: str = "default", verbose: bool = True,
+               overrides: Optional[dict] = None, tag: str = "") -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = INPUT_SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "rules": rules, "status": "ok",
+           "overrides": overrides or {}, "tag": tag}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    bundle = make_bundle(cfg, shape, mesh, RULE_SETS[rules])
+    with mesh:
+        jitted = jax.jit(bundle.fn,
+                         in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        lowered = jitted.lower(*bundle.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    text = compiled.as_text()
+    # Loop-aware analysis (cost_analysis counts while bodies once — a
+    # lax.scan over L layers under-reports by ~L; see launch/hlo.py)
+    hlo = analyze_hlo(text)
+
+    mem_rec = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_rec[attr] = int(v)
+    hbm_resident = (mem_rec.get("argument_size_in_bytes", 0)
+                    + mem_rec.get("temp_size_in_bytes", 0)
+                    + mem_rec.get("output_size_in_bytes", 0)
+                    - mem_rec.get("alias_size_in_bytes", 0))
+
+    rl = derive_roofline(
+        cfg, shape, chips=chips,
+        hlo_flops_per_device=hlo.flops,
+        hlo_bytes_per_device=hlo.hbm_bytes,
+        collective_bytes_per_device=hlo.collective_bytes)
+
+    rec.update({
+        "chips": chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "hlo_flops_per_device": hlo.flops,
+        "hlo_bytes_per_device": hlo.hbm_bytes,
+        "collective_bytes_per_device": hlo.collective_bytes,
+        "collectives": {k: {"count": v[0], "bytes": v[1]}
+                        for k, v in hlo.per_collective.items()},
+        "xla_cost_analysis": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes accessed": float(cost.get("bytes accessed", 0.0)),
+        },
+        "memory_analysis": mem_rec,
+        "hbm_resident_bytes": hbm_resident,
+        "fits_hbm": bool(hbm_resident <= 16e9),
+        "roofline": rl.as_dict(),
+        "hlo_len": len(text),
+    })
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {rec['mesh']} "
+              f"({rules}): compile {t_compile:.0f}s, "
+              f"flops/dev {hlo.flops:.3e}, bytes/dev {hlo.hbm_bytes:.3e}, "
+              f"coll/dev {hlo.collective_bytes:.3e}, "
+              f"dominant={rl.dominant}, "
+              f"resident={hbm_resident/1e9:.1f}GB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--rules", default="default")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    combos = []
+    archs = ASSIGNED if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    pods = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in pods:
+                combos.append((a, s, mp))
+
+    results = []
+    for arch, shape_name, mp in combos:
+        tag = f"{arch}__{shape_name}__{'2x16x16' if mp else '16x16'}" \
+              f"__{args.rules}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[dryrun] skip existing {tag}")
+            continue
+        try:
+            rec = dryrun_one(arch, shape_name, multi_pod=mp,
+                             rules=args.rules)
+        except Exception as e:  # noqa: BLE001
+            rec = {"arch": arch, "shape": shape_name,
+                   "mesh": "2x16x16" if mp else "16x16",
+                   "rules": args.rules, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-3000:]}
+            print(f"[dryrun] ERROR {tag}: {e}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2)
+        results.append(rec)
+
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    er = sum(1 for r in results if r["status"] == "error")
+    print(f"[dryrun] done: {ok} ok, {sk} skipped, {er} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,285 @@
+"""Post-SPMD HLO analysis: loop-aware FLOPs, HBM bytes, collective traffic.
+
+XLA's ``compiled.cost_analysis()`` counts every computation ONCE — a
+``lax.scan`` over L layers reports ~1/L of the real per-step FLOPs.  Since
+the whole roofline hinges on those numbers, we do our own walk of the
+optimized HLO text:
+
+  * every ``while`` carries ``backend_config known_trip_count`` (XLA always
+    knows it for scan loops) -> per-computation execution multiplicity,
+    propagated through the call graph (body/condition/to_apply/calls);
+  * FLOPs: 2 * prod(result_dims) * contracted_size for every ``dot``
+    (+ ``convolution``), scaled by multiplicity — elementwise flops are
+    roofline-irrelevant next to the matmuls;
+  * HBM bytes: per top-level instruction, result + operand bytes
+    (fusion interiors excluded — they live in registers/VMEM), scaled by
+    multiplicity;
+  * collective bytes: result bytes (x2 for all-reduce: ring =
+    reduce-scatter + all-gather) of every collective op, scaled by
+    multiplicity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|\S+\[[\d,]*\]\S*)\s+"
+    r"([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*?)\)\s*->")
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*(\(?[\w\[\],\s\{\}]*)")
+_TRIP_RE = re.compile(r'known_trip_count[":{]+n[":]+(\d+)')
+_CALL_ATTR_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=([\{%][^,)]*[\}]?|%[\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "after-all", "partition-id", "replica-id", "iota",
+             "reshape"}
+
+
+def shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str          # everything after the opening paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    params: Dict[str, str]           # param name -> shape str
+    instrs: List[Instr]
+    is_entry: bool = False
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        hdr = _COMP_HDR_RE.match(line)
+        if hdr and "{" in line:
+            params = {}
+            for pm in _PARAM_RE.finditer(hdr.group(3)):
+                params[pm.group(1)] = pm.group(2)
+            cur = Computation(hdr.group(2), params, [],
+                              is_entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if im:
+            cur.instrs.append(Instr(im.group(1), im.group(2), im.group(3),
+                                    im.group(4)))
+    return comps
+
+
+def _callees(instr: Instr) -> List[str]:
+    out = []
+    for m in _CALL_ATTR_RE.finditer(instr.rest):
+        blob = m.group(1)
+        for nm in _OPERAND_RE.finditer(blob):
+            out.append(nm.group(1))
+    bm = _BRANCH_RE.search(instr.rest)
+    if bm:
+        for nm in _OPERAND_RE.finditer(bm.group(1)):
+            out.append(nm.group(1))
+    return out
+
+
+def _multiplicities(comps: Dict[str, Computation]) -> Dict[str, int]:
+    """Execution count per computation, propagated from ENTRY."""
+    mult: Dict[str, int] = defaultdict(int)
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        # fall back: computation named 'main' or the last one
+        entry = "main" if "main" in comps else list(comps)[-1]
+    mult[entry] = 1
+
+    # iterate to fixpoint (call graph is a DAG; few passes suffice)
+    for _ in range(32):
+        changed = False
+        new = defaultdict(int)
+        new[entry] = 1
+        for cname, comp in comps.items():
+            m = mult.get(cname, 0)
+            if m == 0:
+                continue
+            for ins in comp.instrs:
+                callees = _callees(ins)
+                if not callees:
+                    continue
+                trip = 1
+                if ins.op == "while":
+                    tm = _TRIP_RE.search(ins.rest)
+                    trip = int(tm.group(1)) if tm else 1
+                for cal in callees:
+                    if cal in comps:
+                        new[cal] += m * trip
+        for k, v in new.items():
+            if mult.get(k, 0) != v:
+                changed = True
+        mult = new
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _fusion_interior(comps: Dict[str, Computation]) -> set:
+    """Computations called from fusion ops (+ reduce/scatter/sort regions):
+    their instruction bytes are not HBM traffic."""
+    interior = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op in ("fusion", "reduce", "reduce-window", "scatter",
+                          "sort", "map", "select-and-scatter", "all-reduce",
+                          "reduce-scatter"):
+                for cal in _callees(ins):
+                    if cal in comps:
+                        interior.add(cal)
+    # transitive closure
+    frontier = list(interior)
+    while frontier:
+        c = frontier.pop()
+        for ins in comps[c].instrs:
+            for cal in _callees(ins):
+                if cal in comps and cal not in interior:
+                    interior.add(cal)
+                    frontier.append(cal)
+    return interior
+
+
+def _dot_flops(comp: Computation, ins: Instr) -> float:
+    result = shape_dims(ins.shape)
+    # operand shapes: look up within the computation (instr or param)
+    local = {i.name: i.shape for i in comp.instrs}
+    local.update(comp.params)
+    ops = _OPERAND_RE.findall(ins.rest.split(")")[0])
+    if not ops:
+        return 0.0
+    lhs_shape = local.get(ops[0])
+    if lhs_shape is None:
+        return 0.0
+    lhs = shape_dims(lhs_shape)
+    cm = _CONTRACT_RE.search(ins.rest)
+    contracted = 1
+    if cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            di = int(d)
+            if di < len(lhs):
+                contracted *= lhs[di]
+    import math
+    return 2.0 * math.prod(result) * contracted if result else 0.0
+
+
+@dataclasses.dataclass
+class HloAnalysis:
+    flops: float                         # loop-aware, per device
+    hbm_bytes: float                     # loop-aware, per device
+    collective_bytes: float              # loop-aware, per device
+    per_collective: Dict[str, Tuple[int, int]]   # op -> (count, bytes)
+    mult: Dict[str, int]
+
+    def as_dict(self):
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": self.collective_bytes,
+                "per_collective": {k: {"count": c, "bytes": b}
+                                   for k, (c, b) in
+                                   self.per_collective.items()}}
+
+
+def analyze_hlo(text: str) -> HloAnalysis:
+    comps = parse_module(text)
+    mult = _multiplicities(comps)
+    interior = _fusion_interior(comps)
+
+    flops = 0.0
+    hbm = 0.0
+    coll_bytes = 0.0
+    per_coll: Dict[str, List[int]] = defaultdict(lambda: [0, 0])
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0)
+        if m == 0:
+            continue
+        local = {i.name: i.shape for i in comp.instrs}
+        local.update(comp.params)
+        top_level = cname not in interior
+        for ins in comp.instrs:
+            if ins.op in ("dot", "convolution"):
+                flops += m * _dot_flops(comp, ins)
+            base = ins.op.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVE_OPS and not ins.op.endswith("-done"):
+                b = shape_bytes(ins.shape)
+                moved = 2 * b if base == "all-reduce" else b
+                per_coll[base][0] += m
+                per_coll[base][1] += moved * m
+                coll_bytes += moved * m
+            if top_level and ins.op not in _FREE_OPS \
+                    and not ins.op.endswith("-done"):
+                b = shape_bytes(ins.shape)
+                if ins.op != "fusion":
+                    # operands (first-level names before any attr section)
+                    argpart = ins.rest.split("), ")[0]
+                    for opn in _OPERAND_RE.findall(argpart):
+                        b += shape_bytes(local.get(opn, ""))
+                else:
+                    argpart = ins.rest.split("), ")[0]
+                    for opn in _OPERAND_RE.findall(argpart):
+                        b += shape_bytes(local.get(opn, ""))
+                hbm += m * b
+    return HloAnalysis(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll_bytes,
+        per_collective={k: (v[0], v[1]) for k, v in per_coll.items()},
+        mult=mult)
+
+
+# Back-compat shim used by dryrun.py
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op: Dict[str, Tuple[int, int]]
+    total_bytes: int
+
+
+def collective_stats(text: str) -> CollectiveStats:
+    a = analyze_hlo(text)
+    return CollectiveStats(per_op=a.per_collective,
+                           total_bytes=int(a.collective_bytes))

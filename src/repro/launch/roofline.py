@@ -1,0 +1,100 @@
+"""Roofline-term derivation from a compiled dry-run artifact (§Roofline).
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory     = HLO_bytes_per_device / HBM_bw
+    collective = collective_bytes_per_device / ICI link bw
+
+plus MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) and the usefulness
+ratio MODEL_FLOPS / (HLO_FLOPs · chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import HW
+
+
+def count_params_from_cfg(cfg: ModelConfig) -> Dict[str, float]:
+    """Analytic parameter counts (total and activated-per-token)."""
+    d, f, v, L = cfg.d_model, cfg.d_ff, cfg.vocab_size, cfg.num_layers
+    hd = cfg.resolved_head_dim()
+    attn = d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+    gated = cfg.mlp_activation in ("swiglu", "geglu")
+    mlp_mats = 3 if gated else 2
+    mlp = mlp_mats * d * f
+    if cfg.arch_type == "ssm":                     # rwkv6 time+channel mix
+        tm = 5 * d * d + 2 * 64 * d
+        cm = 2 * d * f + d * d
+        per_layer = tm + cm
+        attn = 0
+        total = L * per_layer + 2 * v * d
+        return {"total": total, "active": total}
+    if cfg.moe is not None:
+        e, k = cfg.moe.num_experts, cfg.moe.top_k
+        router = d * e
+        per_layer = attn + router + e * mlp
+        per_layer_active = attn + router + k * mlp
+        total = L * per_layer + 2 * v * d
+        active = L * per_layer_active + 2 * v * d
+        return {"total": total, "active": active}
+    per_layer = attn + mlp
+    if cfg.ssm is not None and cfg.arch_type == "hybrid":
+        # zamba2: mamba per layer + shared attn blocks
+        d_in = cfg.ssm.expand * d
+        mamba_l = d * (2 * d_in + 2 * cfg.ssm.state_dim + d_in // cfg.ssm.head_dim) \
+            + d_in * d
+        shared = cfg.hybrid.num_shared_blocks * (attn + mlp)
+        total = L * (mamba_l + d) + shared + 2 * v * d
+        return {"total": total, "active": total}
+    n_enc = cfg.encdec.num_encoder_layers if cfg.encdec else 0
+    total = (L + n_enc) * per_layer + (n_enc * 0) + 2 * v * d
+    if cfg.encdec:
+        total += L * attn                           # cross attention
+    return {"total": total, "active": total}
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """6·N·D for training, 2·N·D for inference (per global step)."""
+    counts = count_params_from_cfg(cfg)
+    n_active = counts["active"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1                 # decode: one token
+    return 2.0 * n_active * tokens
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    hlo_flops_total: float
+    usefulness: float              # model_flops / hlo_flops_total
+    dominant: str
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def derive_roofline(cfg: ModelConfig, shape: InputShape, *, chips: int,
+                    hlo_flops_per_device: float,
+                    hlo_bytes_per_device: float,
+                    collective_bytes_per_device: float,
+                    links_per_chip: float = 4.0) -> Roofline:
+    compute = hlo_flops_per_device / HW["peak_flops_bf16"]
+    memory = hlo_bytes_per_device / HW["hbm_bw"]
+    coll = collective_bytes_per_device / (HW["ici_bw"] * links_per_chip)
+    mf = model_flops(cfg, shape)
+    total_hlo = hlo_flops_per_device * chips
+    useful = mf / total_hlo if total_hlo > 0 else float("nan")
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    return Roofline(compute, memory, coll, mf, total_hlo, useful, dominant)

@@ -1,0 +1,95 @@
+"""Batched-decode serving driver: prefill a prompt batch, then step the
+KV-cache decode loop — the same serve_step the decode dry-run shapes lower.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+        --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.models.api import build_model
+from repro.nn.layers import ShardCtx
+from repro.nn.sharding import RULE_SETS
+
+
+def generate(model, params, prompts, gen_len: int, cache_len: int, ctx,
+             temperature: float = 0.0, key=None):
+    """prompts: (B, S) int32.  Greedy (or sampled) decode, returns
+    (B, gen_len) generated tokens."""
+    b, s = prompts.shape
+    cache = model.init_cache(b, cache_len)
+
+    decode = jax.jit(lambda p, c, batch: model.decode_step(p, c, batch, ctx),
+                     donate_argnums=(1,))
+
+    # prefill through the decode path token-by-token for cache parity
+    # (prefill() gives last-token logits but no cache; production prefill
+    # with cache writing is the obvious next optimization)
+    tok = prompts[:, :1]
+    logits = None
+    for i in range(s):
+        logits, cache = decode(params, cache,
+                               {"token": prompts[:, i:i + 1],
+                                "pos": jnp.full((b,), i, jnp.int32)})
+    out = []
+    key = key if key is not None else jax.random.PRNGKey(0)
+    for j in range(gen_len):
+        lg = logits[:, -1]
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, lg / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        out.append(nxt)
+        logits, cache = decode(params, cache,
+                               {"token": nxt[:, None].astype(jnp.int32),
+                                "pos": jnp.full((b,), s + j, jnp.int32)})
+    return jnp.stack(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    mesh = make_local_mesh()
+    rules = RULE_SETS["default"]
+    ctx = ShardCtx(mesh, rules)
+    model = build_model(cfg)
+
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size,
+                         size=(args.batch, args.prompt_len)), jnp.int32)
+        t0 = time.time()
+        toks = generate(model, params, prompts, args.gen,
+                        args.prompt_len + args.gen, ctx,
+                        temperature=args.temperature)
+        dt = time.time() - t0
+        print(f"[serve] {cfg.name}: generated {args.batch}x{args.gen} "
+              f"tokens in {dt:.2f}s "
+              f"({args.batch*args.gen/dt:.1f} tok/s)")
+        print("[serve] sample token ids:", np.asarray(toks[0])[:16])
+        assert np.isfinite(np.asarray(toks)).all()
+
+
+if __name__ == "__main__":
+    main()

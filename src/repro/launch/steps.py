@@ -1,0 +1,172 @@
+"""Step-function + sharding builders shared by dryrun / train / serve.
+
+Everything here works on abstract values (ShapeDtypeStruct) as well as real
+arrays, so the dry-run lowers the exact production step functions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as Pspec
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models.api import build_model
+from repro.nn import param as P
+from repro.nn import sharding as shd
+from repro.nn.layers import ShardCtx
+from repro.optim import adamw, apply_updates
+
+
+def _apply_param_dtype(specs, cfg: ModelConfig):
+    """Plumb cfg.param_dtype into every float32 ParamSpec (bf16 parameters
+    halve FSDP all-gather and gradient reduce traffic on the 100B+
+    configs; moments/updates still accumulate in fp32)."""
+    if cfg.param_dtype == "float32":
+        return specs
+    return jax.tree_util.tree_map(
+        lambda s: dataclasses.replace(s, dtype=cfg.param_dtype)
+        if s.dtype == "float32" else s, specs, is_leaf=P.is_spec)
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A lowered-able step with all of its sharding metadata."""
+    fn: Any                       # the python step function
+    in_shardings: Tuple
+    out_shardings: Any
+    abstract_args: Tuple          # ShapeDtypeStructs matching fn's args
+    donate_argnums: Tuple[int, ...] = ()
+
+
+def batch_shardings(inputs: Dict[str, jax.ShapeDtypeStruct], mesh: Mesh,
+                    rules) -> Dict[str, NamedSharding]:
+    """First dim of every input is the global batch."""
+    out = {}
+    for k, v in inputs.items():
+        axes = ["batch"] + [None] * (v.ndim - 1)
+        spec = shd.activation_spec(mesh, rules, *axes, dims=v.shape)
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def opt_state_shardings(opt_state_abs, param_shardings, mesh: Mesh):
+    """m/v mirror the parameter shardings; scalars are replicated."""
+    flat_params = jax.tree_util.tree_leaves(param_shardings)
+
+    def like_params(tree):
+        return jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(tree), flat_params)
+
+    rep = NamedSharding(mesh, Pspec())
+    res = {"step": rep}
+    for k in ("m", "v", "mu"):
+        if k in opt_state_abs and opt_state_abs[k] is not None:
+            res[k] = like_params(opt_state_abs[k])
+        elif k in opt_state_abs:
+            res[k] = None
+    return res
+
+
+def make_train_bundle(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                      rules, *, lr: float = 3e-4,
+                      opt_state_dtype=jnp.bfloat16) -> StepBundle:
+    model = build_model(cfg)
+    ctx = ShardCtx(mesh, rules)
+    opt = adamw(lr, weight_decay=0.1, state_dtype=opt_state_dtype)
+
+    specs = _apply_param_dtype(model.param_specs(), cfg)
+    params_abs = P.abstract(specs)
+    params_shard = shd.tree_shardings(specs, mesh, rules)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+    opt_shard = opt_state_shardings(opt_abs, params_shard, mesh)
+    inputs = model.input_specs(shape)
+    in_batch_shard = batch_shardings(inputs, mesh, rules)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            loss, metrics = model.loss(p, batch, ctx)
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, loss, metrics
+
+    rep = NamedSharding(mesh, Pspec())
+    out_metrics = {"ce": rep, "aux": rep}
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(params_shard, opt_shard, in_batch_shard),
+        out_shardings=(params_shard, opt_shard, rep, out_metrics),
+        abstract_args=(params_abs, opt_abs, inputs),
+        donate_argnums=(0, 1),
+    )
+
+
+def make_prefill_bundle(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                        rules) -> StepBundle:
+    model = build_model(cfg)
+    ctx = ShardCtx(mesh, rules)
+    specs = _apply_param_dtype(model.param_specs(), cfg)
+    params_abs = P.abstract(specs)
+    params_shard = shd.tree_shardings(specs, mesh, rules)
+    inputs = model.input_specs(shape)
+    in_batch_shard = batch_shardings(inputs, mesh, rules)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, ctx)
+
+    logits_abs = jax.eval_shape(prefill_step, params_abs, inputs)
+    logits_shard = NamedSharding(
+        mesh, shd.activation_spec(mesh, rules, "batch", None, "vocab",
+                                  dims=logits_abs.shape))
+    return StepBundle(
+        fn=prefill_step,
+        in_shardings=(params_shard, in_batch_shard),
+        out_shardings=logits_shard,
+        abstract_args=(params_abs, inputs),
+    )
+
+
+def make_decode_bundle(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                       rules) -> StepBundle:
+    model = build_model(cfg)
+    ctx = ShardCtx(mesh, rules)
+    specs = _apply_param_dtype(model.param_specs(), cfg)
+    params_abs = P.abstract(specs)
+    params_shard = shd.tree_shardings(specs, mesh, rules)
+
+    cache_len = model.decode_cache_len(shape)
+    cache_specs = model.cache_specs(shape.global_batch, cache_len)
+    cache_abs = P.abstract(cache_specs)
+    cache_shard = shd.tree_shardings(cache_specs, mesh, rules)
+    inputs = model.input_specs(shape)
+    in_batch_shard = batch_shardings(inputs, mesh, rules)
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch, ctx)
+
+    logits_abs, _ = jax.eval_shape(serve_step, params_abs, cache_abs, inputs)
+    logits_shard = NamedSharding(
+        mesh, shd.activation_spec(mesh, rules, "batch", None, "vocab",
+                                  dims=logits_abs.shape))
+    return StepBundle(
+        fn=serve_step,
+        in_shardings=(params_shard, cache_shard, in_batch_shard),
+        out_shardings=(logits_shard, cache_shard),
+        abstract_args=(params_abs, cache_abs, inputs),
+        donate_argnums=(1,),
+    )
+
+
+def make_bundle(cfg: ModelConfig, shape: InputShape, mesh: Mesh, rules,
+                **kw) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_bundle(cfg, shape, mesh, rules, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_bundle(cfg, shape, mesh, rules)
+    return make_decode_bundle(cfg, shape, mesh, rules)

@@ -1,0 +1,116 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch repro-100m \
+        --steps 300 --batch 8 --seq 512 [--ckpt-dir ckpts/100m]
+
+Runs the same pjit train_step the dry-run lowers, on whatever mesh the host
+provides (``--devices N`` forces N host devices for local data-parallel
+testing; must be set before jax initializes, hence the env hop below).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _maybe_force_devices():
+    if "--devices" in sys.argv:
+        i = sys.argv.index("--devices")
+        n = int(sys.argv[i + 1])
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}")
+
+
+_maybe_force_devices()
+
+import dataclasses  # noqa: E402
+import time         # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint import latest_step, restore_checkpoint, \
+    save_checkpoint  # noqa: E402
+from repro.configs import INPUT_SHAPES, get_config  # noqa: E402
+from repro.configs.base import InputShape  # noqa: E402
+from repro.data import LMStream, LMStreamConfig  # noqa: E402
+from repro.launch.mesh import make_local_mesh  # noqa: E402
+from repro.launch.steps import make_train_bundle  # noqa: E402
+from repro.models.api import build_model  # noqa: E402
+from repro.nn import param as P  # noqa: E402
+from repro.nn.sharding import RULE_SETS  # noqa: E402
+from repro.optim import adamw, linear_warmup_cosine  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="repro-100m")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--model-axis", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config of the arch family")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, remat=False) \
+        if args.seq * args.batch <= 8192 else cfg
+    mesh = make_local_mesh(args.model_axis)
+    rules = RULE_SETS["default"]
+    shape = InputShape("local", args.seq, args.batch, "train")
+
+    bundle = make_train_bundle(cfg, shape, mesh, rules, lr=args.lr,
+                               opt_state_dtype=jnp.float32)
+    model = build_model(cfg)
+    opt = adamw(linear_warmup_cosine(args.lr, 20, args.steps),
+                weight_decay=0.1)
+
+    with mesh:
+        jit_step = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                           out_shardings=bundle.out_shardings,
+                           donate_argnums=bundle.donate_argnums)
+        params = model.init(jax.random.PRNGKey(0))
+        opt_state = opt.init(params)
+        start = 0
+        if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+            start = latest_step(args.ckpt_dir)
+            params = restore_checkpoint(args.ckpt_dir, params, step=start)
+            print(f"[train] restored step {start} from {args.ckpt_dir}")
+
+        stream = LMStream(LMStreamConfig(vocab_size=cfg.vocab_size))
+        t0 = time.time()
+        n_params = P.count_params(params)
+        print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
+              f"mesh {dict(mesh.shape)}, batch {args.batch} x seq {args.seq}")
+        for step in range(start, args.steps):
+            toks, labs = stream.sample(args.batch, args.seq, seed=step + 1)
+            batch = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+            params, opt_state, loss, metrics = jit_step(params, opt_state,
+                                                        batch)
+            if (step + 1) % args.log_every == 0 or step == start:
+                loss_v = float(loss)
+                dt = time.time() - t0
+                tok_s = args.batch * args.seq * (step + 1 - start) / dt
+                print(f"[train] step {step+1}: loss {loss_v:.4f} "
+                      f"ce {float(metrics['ce']):.4f} "
+                      f"({tok_s:.0f} tok/s)")
+                assert np.isfinite(loss_v), "loss diverged"
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                save_checkpoint(args.ckpt_dir, step + 1, params,
+                                metadata={"loss": float(loss)})
+        print(f"[train] done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Model factory: config -> model instance."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.models.common import LMBase
+from repro.models.decoder import DecoderLM
+from repro.models.rwkv_model import RWKVModel
+from repro.models.zamba import ZambaModel
+from repro.models.encdec import EncDecModel
+
+
+def build_model(cfg: ModelConfig) -> LMBase:
+    if cfg.encdec is not None:
+        return EncDecModel(cfg)
+    if cfg.arch_type == "ssm":
+        return RWKVModel(cfg)
+    if cfg.arch_type == "hybrid":
+        return ZambaModel(cfg)
+    # dense / moe / vlm / audio-decoder
+    return DecoderLM(cfg)

@@ -1,0 +1,128 @@
+"""Shared model machinery: spec stacking, chunked cross-entropy, base class."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.nn import param as P
+from repro.nn.layers import ShardCtx, NO_SHARD, rmsnorm, embedding_spec, embed
+
+
+def stack_specs(specs, n: int):
+    """Prepend a scan-stacked ('layers', n) axis to every leaf spec."""
+    return jax.tree_util.tree_map(
+        lambda s: dataclasses.replace(s, shape=(n,) + s.shape,
+                                      axes=("layers",) + s.axes),
+        specs, is_leaf=P.is_spec)
+
+
+def slice_tree(tree, i0: int, i1: int):
+    return jax.tree_util.tree_map(lambda a: a[i0:i1], tree)
+
+
+def take_layer(tree, i: int):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def chunked_softmax_xent(x, table, labels, mask=None, chunk: int = 512,
+                         ctx: ShardCtx = NO_SHARD):
+    """Next-token CE without materializing (B, S, V) fp32 logits.
+
+    Computes per-sequence-chunk logits inside a remat'd scan: peak logits
+    memory drops from S/chunk x.  x: (B,S,D) final hidden; table: (V,D).
+    """
+    b, s, d = x.shape
+    if s % chunk or s <= chunk:
+        chunk = s
+    n = s // chunk
+    xc = jnp.reshape(x, (b, n, chunk, d)).swapaxes(0, 1)          # (n,B,C,D)
+    lc = jnp.reshape(labels, (b, n, chunk)).swapaxes(0, 1)
+    mc = (jnp.ones((n, b, chunk), jnp.float32) if mask is None
+          else jnp.reshape(mask, (b, n, chunk)).swapaxes(0, 1).astype(jnp.float32))
+
+    @jax.checkpoint
+    def piece(xs):
+        xi, li, mi = xs
+        logits = jnp.einsum("bcd,vd->bcv", xi.astype(jnp.float32),
+                            table.astype(jnp.float32))
+        logits = ctx.constrain(logits, "batch", None, "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        return jnp.sum((logz - ll) * mi), jnp.sum(mi)
+
+    def scan_fn(carry, xs):
+        nll, cnt = piece(xs)
+        return (carry[0] + nll, carry[1] + cnt), None
+
+    (nll, cnt), _ = jax.lax.scan(scan_fn, (0.0, 0.0), (xc, lc, mc))
+    return nll / jnp.maximum(cnt, 1.0)
+
+
+class LMBase:
+    """Interface every model family implements."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- parameters ----
+    def param_specs(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def init(self, key):
+        return P.materialize(self.param_specs(), key)
+
+    # ---- training ----
+    def loss(self, params, batch, ctx: ShardCtx = NO_SHARD):
+        raise NotImplementedError
+
+    # ---- serving ----
+    def prefill(self, params, batch, ctx: ShardCtx = NO_SHARD):
+        """Returns (last-token logits, cache) — used by serve drivers."""
+        raise NotImplementedError
+
+    def decode_step(self, params, cache, batch, ctx: ShardCtx = NO_SHARD):
+        """batch: {'token': (B,1), 'pos': (B,)}.  Returns (logits, cache)."""
+        raise NotImplementedError
+
+    def cache_specs(self, batch: int, max_len: int):
+        raise NotImplementedError
+
+    # ---- dry-run inputs ----
+    def input_specs(self, shape: InputShape) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input."""
+        cfg = self.cfg
+        i32 = jnp.int32
+        if shape.kind == "train":
+            text = shape.seq_len - self._frontend_len()
+            d = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, text), i32),
+                 "labels": jax.ShapeDtypeStruct((shape.global_batch, text), i32)}
+        elif shape.kind == "prefill":
+            text = shape.seq_len - self._frontend_len()
+            d = {"tokens": jax.ShapeDtypeStruct((shape.global_batch, text), i32)}
+        else:  # decode
+            d = {"token": jax.ShapeDtypeStruct((shape.global_batch, 1), i32),
+                 "pos": jax.ShapeDtypeStruct((shape.global_batch,), i32)}
+            return d
+        fl = self._frontend_len()
+        if fl:
+            d["embeds"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, fl, cfg.frontend.embed_dim), jnp.bfloat16)
+        return d
+
+    def _frontend_len(self) -> int:
+        fe = self.cfg.frontend
+        if fe.kind != "none" and self.cfg.encdec is None:
+            return fe.num_embeds
+        return 0
+
+    # window to use for a decode shape (ring-buffer cache for long ctx)
+    def decode_cache_len(self, shape: InputShape) -> int:
+        cfg = self.cfg
+        if cfg.sliding_window is not None and shape.seq_len > cfg.sliding_window \
+                and cfg.use_sliding_for_long and shape.name == "long_500k":
+            return cfg.sliding_window
+        return shape.seq_len

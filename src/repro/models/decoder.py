@@ -1,0 +1,183 @@
+"""Unified decoder-only LM: dense (llama3.2/granite/minitron/gemma),
+MoE (grok-1, llama4-scout), and stub-frontend decoders (internvl2 vlm).
+
+Layers are scan-stacked (params have a leading 'layers' axis) so HLO stays
+small for 16-88 layer configs; remat wraps the scanned block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.nn import param as P
+from repro.nn import attention as attn
+from repro.nn import mlp as mlp_lib
+from repro.nn import moe as moe_lib
+from repro.nn.layers import (ShardCtx, NO_SHARD, rmsnorm, rmsnorm_spec,
+                             embedding_spec, embed, unembed)
+from repro.models.common import LMBase, stack_specs, chunked_softmax_xent
+
+
+def _layer_specs(cfg: ModelConfig):
+    hd = cfg.resolved_head_dim()
+    specs = {
+        "ln1": rmsnorm_spec(cfg.d_model),
+        "attn": attn.attention_specs(cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, hd),
+        "ln2": rmsnorm_spec(cfg.d_model),
+    }
+    if cfg.moe is not None:
+        specs["moe"] = moe_lib.moe_specs(cfg.d_model, cfg.d_ff, cfg.moe,
+                                         cfg.mlp_activation)
+    else:
+        specs["mlp"] = mlp_lib.mlp_specs(cfg.d_model, cfg.d_ff,
+                                         cfg.mlp_activation)
+    return specs
+
+
+class DecoderLM(LMBase):
+    def param_specs(self):
+        cfg = self.cfg
+        specs = {
+            "embedding": embedding_spec(cfg.vocab_size, cfg.d_model),
+            "layers": stack_specs(_layer_specs(cfg), cfg.num_layers),
+            "ln_f": rmsnorm_spec(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            specs["unembed"] = P.ParamSpec(
+                (cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                init="embed", scale=0.02)
+        return specs
+
+    # ------------------------------------------------------------- forward
+    def _block(self, p, x, positions, ctx, window, dtype):
+        cfg = self.cfg
+        h = attn.attend(p["attn"], rmsnorm(x, p["ln1"], cfg.norm_eps),
+                        positions, num_heads=cfg.num_heads,
+                        num_kv_heads=cfg.num_kv_heads,
+                        head_dim=cfg.resolved_head_dim(),
+                        rope_theta=cfg.rope_theta, causal=True,
+                        window=window, ctx=ctx, dtype=dtype,
+                        impl=cfg.attention_impl)
+        x = x + h
+        if cfg.moe is not None:
+            y, aux = moe_lib.moe_mlp(p["moe"],
+                                     rmsnorm(x, p["ln2"], cfg.norm_eps),
+                                     cfg.moe, cfg.mlp_activation, ctx, dtype)
+        else:
+            y = mlp_lib.mlp(p["mlp"], rmsnorm(x, p["ln2"], cfg.norm_eps),
+                            cfg.mlp_activation, ctx, dtype)
+            aux = jnp.zeros((), jnp.float32)
+        return x + y, aux
+
+    def _backbone(self, params, x, positions, ctx, window=None):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+
+        def body(carry, layer_params):
+            h, aux = carry
+            h = ctx.constrain(h, "batch", None, "embed_act")
+            h2, a = self._block(layer_params, h, positions, ctx, window, dtype)
+            return (h2, aux + a), None
+
+        if cfg.remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable
+                if cfg.remat_policy == "nothing_saveable"
+                else jax.checkpoint_policies.checkpoint_dots)
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                   params["layers"])
+        return rmsnorm(x, params["ln_f"], cfg.norm_eps), aux
+
+    def _embed_inputs(self, params, batch, dtype):
+        cfg = self.cfg
+        x = embed(batch["tokens"], params["embedding"], dtype)
+        if "embeds" in batch:   # vlm/audio stub frontend: prepend embeddings
+            x = jnp.concatenate([batch["embeds"].astype(dtype), x], axis=1)
+        return x
+
+    # ------------------------------------------------------------- training
+    def loss(self, params, batch, ctx: ShardCtx = NO_SHARD):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = self._embed_inputs(params, batch, dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        x = ctx.constrain(x, "batch", None, None)
+        h, aux = self._backbone(params, x, positions, ctx,
+                                window=cfg.sliding_window
+                                if cfg.sliding_window and s > cfg.sliding_window
+                                else None)
+        table = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+        npad = x.shape[1] - batch["labels"].shape[1]
+        h_text = h[:, npad:]
+        ce = chunked_softmax_xent(h_text, table, batch["labels"], ctx=ctx)
+        metrics = {"ce": ce, "aux": aux}
+        return ce + aux, metrics
+
+    # ------------------------------------------------------------- serving
+    def prefill(self, params, batch, ctx: ShardCtx = NO_SHARD):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = self._embed_inputs(params, batch, dtype)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h, _ = self._backbone(params, x, positions, ctx,
+                              window=cfg.sliding_window
+                              if cfg.sliding_window and s > cfg.sliding_window
+                              else None)
+        table = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(h[:, -1:], table)
+        return ctx.constrain(logits, "batch", None, "vocab")
+
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        one = attn.cache_specs(batch, max_len, cfg.num_kv_heads,
+                               cfg.resolved_head_dim(), dtype=cfg.dtype)
+        return stack_specs(one, cfg.num_layers)
+
+    def init_cache(self, batch: int, max_len: int):
+        return P.materialize(self.cache_specs(batch, max_len),
+                             jax.random.PRNGKey(0))
+
+    def decode_step(self, params, cache, batch, ctx: ShardCtx = NO_SHARD,
+                    window: Optional[int] = None):
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.dtype)
+        x = embed(batch["token"], params["embedding"], dtype)
+        pos = batch["pos"]
+        max_len = cache["k"].shape[2]
+        win = window
+        if win is None and cfg.sliding_window is not None \
+                and max_len == cfg.sliding_window:
+            win = cfg.sliding_window   # ring-buffer cache
+
+        def body(carry, xs):
+            h = carry
+            layer_params, layer_cache = xs
+            hn = rmsnorm(h, layer_params["ln1"], cfg.norm_eps)
+            a, new_cache = attn.decode_attend(
+                layer_params["attn"], hn, layer_cache, pos,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim(), rope_theta=cfg.rope_theta,
+                window=win, ctx=ctx, dtype=dtype)
+            h = h + a
+            if cfg.moe is not None:
+                y, _ = moe_lib.moe_mlp(layer_params["moe"],
+                                       rmsnorm(h, layer_params["ln2"], cfg.norm_eps),
+                                       cfg.moe, cfg.mlp_activation, ctx, dtype)
+            else:
+                y = mlp_lib.mlp(layer_params["mlp"],
+                                rmsnorm(h, layer_params["ln2"], cfg.norm_eps),
+                                cfg.mlp_activation, ctx, dtype)
+            return h + y, new_cache
+
+        h, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+        table = params["embedding"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(h, table)
+        return ctx.constrain(logits, "batch", None, "vocab"), new_cache

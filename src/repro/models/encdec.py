@@ -1,0 +1,222 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder: bidirectional self-attention over stub frame embeddings (the audio
+frontend carve-out).  Decoder: causal self-attention + cross-attention to
+the encoder memory.  Decode caches self-attn KV per layer; cross KV is
+precomputed once from the encoder output.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape
+from repro.nn import param as P
+from repro.nn import attention as attn
+from repro.nn import mlp as mlp_lib
+from repro.nn.layers import ShardCtx, NO_SHARD, rmsnorm, rmsnorm_spec, \
+    embedding_spec, embed, unembed
+from repro.models.common import LMBase, stack_specs, chunked_softmax_xent
+
+
+def _enc_layer_specs(cfg):
+    hd = cfg.resolved_head_dim()
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model),
+        "attn": attn.attention_specs(cfg.d_model, cfg.num_heads,
+                                     cfg.num_kv_heads, hd),
+        "ln2": rmsnorm_spec(cfg.d_model),
+        "mlp": mlp_lib.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_activation),
+    }
+
+
+def _dec_layer_specs(cfg):
+    hd = cfg.resolved_head_dim()
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model),
+        "self_attn": attn.attention_specs(cfg.d_model, cfg.num_heads,
+                                          cfg.num_kv_heads, hd),
+        "ln_x": rmsnorm_spec(cfg.d_model),
+        "cross_attn": attn.attention_specs(cfg.d_model, cfg.num_heads,
+                                           cfg.num_kv_heads, hd),
+        "ln2": rmsnorm_spec(cfg.d_model),
+        "mlp": mlp_lib.mlp_specs(cfg.d_model, cfg.d_ff, cfg.mlp_activation),
+    }
+
+
+class EncDecModel(LMBase):
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embedding": embedding_spec(cfg.vocab_size, cfg.d_model),
+            "enc_layers": stack_specs(_enc_layer_specs(cfg),
+                                      cfg.encdec.num_encoder_layers),
+            "enc_ln_f": rmsnorm_spec(cfg.d_model),
+            "dec_layers": stack_specs(_dec_layer_specs(cfg), cfg.num_layers),
+            "ln_f": rmsnorm_spec(cfg.d_model),
+            "unembed": P.ParamSpec((cfg.vocab_size, cfg.d_model),
+                                   ("vocab", "embed"), init="embed", scale=0.02),
+        }
+
+    def _encode(self, params, src, ctx):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = src.astype(dt)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(h, lp):
+            h = ctx.constrain(h, "batch", None, "embed_act")
+            a = attn.attend(lp["attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps),
+                            positions, num_heads=cfg.num_heads,
+                            num_kv_heads=cfg.num_kv_heads,
+                            head_dim=cfg.resolved_head_dim(),
+                            rope_theta=cfg.rope_theta, causal=False,
+                            ctx=ctx, dtype=dt)
+            h = h + a
+            y = mlp_lib.mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                            cfg.mlp_activation, ctx, dt)
+            return h + y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+        return rmsnorm(x, params["enc_ln_f"], cfg.norm_eps)
+
+    def _cross_kv(self, lp, memory, dt):
+        k = jnp.einsum("bsd,dhk->bshk", memory, lp["cross_attn"]["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", memory, lp["cross_attn"]["wv"].astype(dt))
+        return k, v
+
+    def _decode_seq(self, params, tokens, memory, ctx):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = embed(tokens, params["embedding"], dt)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+        def body(h, lp):
+            h = ctx.constrain(h, "batch", None, "embed_act")
+            a = attn.attend(lp["self_attn"],
+                            rmsnorm(h, lp["ln1"], cfg.norm_eps), positions,
+                            num_heads=cfg.num_heads,
+                            num_kv_heads=cfg.num_kv_heads,
+                            head_dim=cfg.resolved_head_dim(),
+                            rope_theta=cfg.rope_theta, causal=True,
+                            ctx=ctx, dtype=dt)
+            h = h + a
+            ckv = self._cross_kv(lp, memory, dt)
+            c = attn.attend(lp["cross_attn"],
+                            rmsnorm(h, lp["ln_x"], cfg.norm_eps), positions,
+                            num_heads=cfg.num_heads,
+                            num_kv_heads=cfg.num_kv_heads,
+                            head_dim=cfg.resolved_head_dim(),
+                            rope_theta=cfg.rope_theta, cross_kv=ckv,
+                            ctx=ctx, dtype=dt)
+            h = h + c
+            y = mlp_lib.mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                            cfg.mlp_activation, ctx, dt)
+            return h + y, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["dec_layers"])
+        return rmsnorm(x, params["ln_f"], cfg.norm_eps)
+
+    def loss(self, params, batch, ctx: ShardCtx = NO_SHARD):
+        memory = self._encode(params, batch["src_embeds"], ctx)
+        h = self._decode_seq(params, batch["tokens"], memory, ctx)
+        ce = chunked_softmax_xent(h, params["unembed"], batch["labels"], ctx=ctx)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch, ctx: ShardCtx = NO_SHARD):
+        memory = self._encode(params, batch["src_embeds"], ctx)
+        h = self._decode_seq(params, batch["tokens"], memory, ctx)
+        logits = unembed(h[:, -1:], params["unembed"])
+        return ctx.constrain(logits, "batch", None, "vocab")
+
+    # ---------------------------------------------------------------- decode
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim()
+        self_kv = stack_specs(attn.cache_specs(batch, max_len,
+                                               cfg.num_kv_heads, hd, cfg.dtype),
+                              cfg.num_layers)
+        enc = cfg.encdec.encoder_seq
+        cross = {
+            "k": P.ParamSpec((cfg.num_layers, batch, enc, cfg.num_kv_heads, hd),
+                             ("layers", "batch", None, "kv_heads", "qkv"),
+                             init="zeros", dtype=cfg.dtype),
+            "v": P.ParamSpec((cfg.num_layers, batch, enc, cfg.num_kv_heads, hd),
+                             ("layers", "batch", None, "kv_heads", "qkv"),
+                             init="zeros", dtype=cfg.dtype),
+        }
+        return {"self": self_kv, "cross": cross}
+
+    def init_cache(self, batch: int, max_len: int):
+        return P.materialize(self.cache_specs(batch, max_len),
+                             jax.random.PRNGKey(0))
+
+    def build_cross_cache(self, params, memory):
+        dt = jnp.dtype(self.cfg.dtype)
+        L = self.cfg.num_layers
+        ks, vs = [], []
+        for i in range(L):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["dec_layers"])
+            k, v = self._cross_kv(lp, memory, dt)
+            ks.append(k); vs.append(v)
+        return {"k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+    def decode_step(self, params, cache, batch, ctx: ShardCtx = NO_SHARD,
+                    window=None):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = embed(batch["token"], params["embedding"], dt)
+        pos = batch["pos"]
+
+        def body(h, xs):
+            lp, kvc, crossc = xs
+            a, new_kv = attn.decode_attend(
+                lp["self_attn"], rmsnorm(h, lp["ln1"], cfg.norm_eps), kvc, pos,
+                num_heads=cfg.num_heads, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim(), rope_theta=cfg.rope_theta,
+                ctx=ctx, dtype=dt)
+            h = h + a
+            c, _ = attn.decode_attend(
+                lp["cross_attn"], rmsnorm(h, lp["ln_x"], cfg.norm_eps),
+                None, pos, num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim(), rope_theta=cfg.rope_theta,
+                ctx=ctx, dtype=dt, cross_kv=(crossc["k"], crossc["v"]))
+            h = h + c
+            y = mlp_lib.mlp(lp["mlp"], rmsnorm(h, lp["ln2"], cfg.norm_eps),
+                            cfg.mlp_activation, ctx, dt)
+            return h + y, new_kv
+
+        h, new_self = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["self"], cache["cross"]))
+        h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+        logits = unembed(h, params["unembed"])
+        return (ctx.constrain(logits, "batch", None, "vocab"),
+                {"self": new_self, "cross": cache["cross"]})
+
+    def input_specs(self, shape: InputShape):
+        cfg = self.cfg
+        i32 = jnp.int32
+        enc = cfg.encdec.encoder_seq
+        src = jax.ShapeDtypeStruct(
+            (shape.global_batch, enc, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            return {"src_embeds": src,
+                    "tokens": jax.ShapeDtypeStruct(
+                        (shape.global_batch, shape.seq_len), i32),
+                    "labels": jax.ShapeDtypeStruct(
+                        (shape.global_batch, shape.seq_len), i32)}
+        if shape.kind == "prefill":
+            return {"src_embeds": src,
+                    "tokens": jax.ShapeDtypeStruct(
+                        (shape.global_batch, shape.seq_len), i32)}
+        return {"token": jax.ShapeDtypeStruct((shape.global_batch, 1), i32),
+                "pos": jax.ShapeDtypeStruct((shape.global_batch,), i32)}

@@ -1,0 +1,128 @@
+"""RWKV6 language model (attention-free; O(1)-state decode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape
+from repro.nn import param as P
+from repro.nn import rwkv
+from repro.nn.layers import ShardCtx, NO_SHARD, rmsnorm, rmsnorm_spec, \
+    embedding_spec, embed, unembed
+from repro.models.common import LMBase, stack_specs, chunked_softmax_xent
+
+
+def _layer_specs(cfg):
+    return {
+        "ln1": rmsnorm_spec(cfg.d_model),
+        "att": rwkv.time_mix_specs(cfg),
+        "ln2": rmsnorm_spec(cfg.d_model),
+        "ffn": rwkv.channel_mix_specs(cfg),
+    }
+
+
+class RWKVModel(LMBase):
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embedding": embedding_spec(cfg.vocab_size, cfg.d_model),
+            "ln_in": rmsnorm_spec(cfg.d_model),
+            "layers": stack_specs(_layer_specs(cfg), cfg.num_layers),
+            "ln_f": rmsnorm_spec(cfg.d_model),
+            "unembed": P.ParamSpec((cfg.vocab_size, cfg.d_model),
+                                   ("vocab", "embed"), init="embed", scale=0.02),
+        }
+
+    def _backbone(self, params, x, ctx, state=None):
+        """state: None (fresh) or stacked per-layer state pytree."""
+        cfg = self.cfg
+        b = x.shape[0]
+        h, hd = cfg.num_heads, cfg.resolved_head_dim()
+        if state is None:
+            state = self._zero_state(b)
+
+        def body(carry, xs):
+            hidd = carry
+            lp, st = xs
+            prev_att, wkv_state, prev_ffn = st
+            hidd = ctx.constrain(hidd, "batch", None, "embed_act")
+            a, (new_prev_att, new_wkv) = rwkv.time_mix(
+                lp["att"], rmsnorm(hidd, lp["ln1"], cfg.norm_eps), cfg,
+                prev_x=prev_att, state=wkv_state, ctx=ctx)
+            hidd = hidd + a
+            f, new_prev_ffn = rwkv.channel_mix(
+                lp["ffn"], rmsnorm(hidd, lp["ln2"], cfg.norm_eps),
+                prev_x=prev_ffn)
+            return hidd + f, (new_prev_att, new_wkv, new_prev_ffn)
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, new_state = jax.lax.scan(body, x, (params["layers"], state))
+        return rmsnorm(x, params["ln_f"], cfg.norm_eps), new_state
+
+    def _zero_state(self, batch):
+        cfg = self.cfg
+        h, hd = cfg.num_heads, cfg.resolved_head_dim()
+        dt = jnp.dtype(cfg.dtype)
+        L = cfg.num_layers
+        return (jnp.zeros((L, batch, cfg.d_model), dt),
+                jnp.zeros((L, batch, h, hd, hd), jnp.float32),
+                jnp.zeros((L, batch, cfg.d_model), dt))
+
+    def cache_specs(self, batch: int, max_len: int):
+        cfg = self.cfg
+        h, hd = cfg.num_heads, cfg.resolved_head_dim()
+        L = cfg.num_layers
+        return (P.ParamSpec((L, batch, cfg.d_model), ("layers", "batch", "embed_act"),
+                            init="zeros", dtype=cfg.dtype),
+                P.ParamSpec((L, batch, h, hd, hd), ("layers", "batch", "heads", None, None),
+                            init="zeros", dtype="float32"),
+                P.ParamSpec((L, batch, cfg.d_model), ("layers", "batch", "embed_act"),
+                            init="zeros", dtype=cfg.dtype))
+
+    def init_cache(self, batch: int, max_len: int):
+        return self._zero_state(batch)
+
+    def loss(self, params, batch, ctx: ShardCtx = NO_SHARD):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = embed(batch["tokens"], params["embedding"], dt)
+        x = rmsnorm(x, params["ln_in"], cfg.norm_eps)
+        x = ctx.constrain(x, "batch", None, None)
+        h, _ = self._backbone(params, x, ctx)
+        ce = chunked_softmax_xent(h, params["unembed"], batch["labels"], ctx=ctx)
+        return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill(self, params, batch, ctx: ShardCtx = NO_SHARD):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = embed(batch["tokens"], params["embedding"], dt)
+        x = rmsnorm(x, params["ln_in"], cfg.norm_eps)
+        h, state = self._backbone(params, x, ctx)
+        logits = unembed(h[:, -1:], params["unembed"])
+        return ctx.constrain(logits, "batch", None, "vocab")
+
+    def decode_step(self, params, cache, batch, ctx: ShardCtx = NO_SHARD,
+                    window=None):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        x = embed(batch["token"], params["embedding"], dt)
+        x = rmsnorm(x, params["ln_in"], cfg.norm_eps)
+
+        def body(carry, xs):
+            hidd = carry
+            lp, st = xs
+            prev_att, wkv_state, prev_ffn = st
+            a, (na, nw) = rwkv.time_mix_decode(
+                lp["att"], rmsnorm(hidd, lp["ln1"], cfg.norm_eps), cfg,
+                prev_x=prev_att, state=wkv_state)
+            hidd = hidd + a
+            f, nf = rwkv.channel_mix(
+                lp["ffn"], rmsnorm(hidd, lp["ln2"], cfg.norm_eps),
+                prev_x=prev_ffn)
+            return hidd + f, (na, nw, nf)
+
+        h, new_state = jax.lax.scan(body, x, (params["layers"], cache))
+        h = rmsnorm(h, params["ln_f"], cfg.norm_eps)
+        logits = unembed(h, params["unembed"])
+        return ctx.constrain(logits, "batch", None, "vocab"), new_state

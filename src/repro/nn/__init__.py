@@ -1,0 +1,3 @@
+"""Pure-JAX neural net substrate (no flax): param specs, sharding rules,
+layers, attention, MLP/MoE, gated-linear-attention (rwkv6/mamba2) primitives.
+"""

@@ -1,0 +1,84 @@
+"""Basic layers: RMSNorm, embedding, rotary embeddings, shard context."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+from repro.nn import sharding as shd
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Carries mesh + logical rules into model code; None mesh = no-op."""
+    mesh: Optional[object] = None
+    rules: object = None
+
+    def constrain(self, x, *axes):
+        if self.mesh is None:
+            return x
+        return shd.constrain(x, self.mesh, self.rules, *axes)
+
+
+NO_SHARD = ShardCtx()
+
+
+# ---------------------------------------------------------------- rmsnorm
+def rmsnorm_spec(dim: int) -> ParamSpec:
+    return ParamSpec((dim,), ("embed",), init="ones")
+
+
+def rmsnorm(x, scale, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- embedding
+def embedding_spec(vocab: int, dim: int) -> ParamSpec:
+    return ParamSpec((vocab, dim), ("vocab", "embed"), init="embed", scale=0.02)
+
+
+def embed(tokens, table, compute_dtype=jnp.bfloat16):
+    return jnp.take(table.astype(compute_dtype), tokens, axis=0)
+
+
+def unembed(x, table):
+    # logits in fp32 for a stable softmax-xent
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., seq, heads, head_dim); positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,half)
+    cos = jnp.cos(angles)[..., :, None, :]                    # (...,S,1,half)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- misc
+def softmax_xent(logits, labels, mask=None):
+    """Mean next-token cross entropy.  logits (..., V) fp32, labels int."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is not None:
+        mask = mask.astype(nll.dtype)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,118 @@
+"""Chunked gated-linear-attention (GLA) primitive.
+
+One recurrence covers the whole linear-attention family we ship:
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: (Dk, Dv))
+    mamba2 : y_t = q_t . S_t                      (current token decayed in)
+    rwkv6  : y_t = q_t . S_{t-1} + (q_t . (u*k_t)) v_t   (bonus term u)
+
+The chunked form turns the scan into MXU-friendly matmuls: per chunk of
+length C we compute an intra-chunk (C x C) decay-weighted attention plus an
+inter-chunk contribution from the carried state, and advance the state once
+per chunk.  This is the TPU-native adaptation of GPU chunked-scan kernels
+(FLA / mamba2 SSD): chunk dims are picked for MXU alignment, and the same
+algorithm is implemented as a Pallas kernel in kernels/ssm_scan.
+
+Numerics: decay products are computed as exp(cumulative-log) in fp32; like
+the reference GPU kernels this is stable for chunk lengths <= 128 with
+per-step decay >= ~exp(-0.5).  The Pallas kernel and this oracle share the
+algorithm exactly, so kernel tests are bit-comparable at fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_BIG = -1e30
+
+
+def gla_chunked(q, k, v, log_w, *, chunk: int, variant: str = "mamba",
+                bonus: Optional[jax.Array] = None,
+                initial_state: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """q,k: (B, L, H, Dk); v: (B, L, H, Dv); log_w: (B, L, H, Dk) (<=0).
+
+    Returns (y: (B, L, H, Dv), final_state: (B, H, Dk, Dv)).
+    L must be a multiple of ``chunk``.
+    """
+    assert variant in ("mamba", "rwkv")
+    b, l, h, dk = q.shape
+    dv = v.shape[-1]
+    orig_l = l
+    if l % chunk:
+        # pad with k=v=0 (state-neutral) and log_w=0 (no decay)
+        pad = chunk - l % chunk
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v, log_w = zpad(q), zpad(k), zpad(v), zpad(log_w)
+        l += pad
+    n = l // chunk
+
+    f32 = jnp.float32
+    qc = jnp.reshape(q.astype(f32), (b, n, chunk, h, dk))
+    kc = jnp.reshape(k.astype(f32), (b, n, chunk, h, dk))
+    vc = jnp.reshape(v.astype(f32), (b, n, chunk, h, dv))
+    lw = jnp.reshape(log_w.astype(f32), (b, n, chunk, h, dk))
+
+    lc = jnp.cumsum(lw, axis=2)                       # inclusive cumulative log-decay
+    lc_total = lc[:, :, -1]                           # (B,N,H,Dk)
+    # query-side decay scale: inclusive (mamba) or exclusive (rwkv)
+    q_lc = lc if variant == "mamba" else lc - lw
+
+    q_s = qc * jnp.exp(q_lc)                          # (B,N,C,H,Dk)
+    k_s = kc * jnp.exp(-lc)
+    k_adv = kc * jnp.exp(lc_total[:, :, None] - lc)   # decay to end-of-chunk
+
+    att = jnp.einsum("bnthd,bnshd->bnhts", q_s, k_s)  # (B,N,H,C,C)
+    ti = jnp.arange(chunk)
+    if variant == "mamba":
+        mask = ti[:, None] >= ti[None, :]
+    else:
+        mask = ti[:, None] > ti[None, :]              # strict; diag via bonus
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    y_intra = jnp.einsum("bnhts,bnshd->bnthd", att, vc)
+    if variant == "rwkv":
+        diag = jnp.einsum("bnthd,hd,bnthd->bnth", qc, bonus.astype(f32), kc)
+        y_intra = y_intra + diag[..., None] * vc
+
+    s0 = (jnp.zeros((b, h, dk, dv), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    # prepare scan inputs with chunk axis leading
+    q_s_t = jnp.moveaxis(q_s, 1, 0)                   # (N,B,C,H,Dk)
+    k_adv_t = jnp.moveaxis(k_adv, 1, 0)
+    v_t = jnp.moveaxis(vc, 1, 0)
+    lt_t = jnp.moveaxis(lc_total, 1, 0)               # (N,B,H,Dk)
+
+    def scan_step(s, xs):
+        q_sc, k_advc, vcc, lt = xs
+        y_inter = jnp.einsum("bthd,bhdv->bthv", q_sc, s)
+        decay = jnp.exp(lt)                           # (B,H,Dk)
+        s_new = s * decay[..., None] + jnp.einsum("bthd,bthv->bhdv", k_advc, vcc)
+        return s_new, y_inter
+
+    s_final, y_inter = jax.lax.scan(scan_step, s0, (q_s_t, k_adv_t, v_t, lt_t))
+    y_inter = jnp.moveaxis(y_inter, 0, 1)             # (B,N,C,H,Dv)
+    y = jnp.reshape(y_intra + y_inter, (b, l, h, dv))[:, :orig_l]
+    return y.astype(v.dtype), s_final
+
+
+def gla_decode(q, k, v, log_w, state, *, variant: str = "mamba",
+               bonus: Optional[jax.Array] = None):
+    """Single-token recurrent step.
+
+    q,k: (B,H,Dk); v: (B,H,Dv); log_w: (B,H,Dk); state: (B,H,Dk,Dv).
+    Returns (y (B,H,Dv), new_state).
+    """
+    f32 = jnp.float32
+    q32, k32, v32 = q.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(log_w.astype(f32))
+    outer = jnp.einsum("bhd,bhv->bhdv", k32, v32)
+    new_state = state * w[..., None] + outer
+    if variant == "mamba":
+        y = jnp.einsum("bhd,bhdv->bhv", q32, new_state)
+    else:
+        y = jnp.einsum("bhd,bhdv->bhv", q32, state) + \
+            jnp.einsum("bhd,hd,bhd->bh", q32, bonus.astype(f32), k32)[..., None] * v32
+    return y.astype(v.dtype), new_state

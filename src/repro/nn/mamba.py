@@ -1,0 +1,153 @@
+"""Mamba2 (SSD) block, chunked-scan formulation on the GLA primitive.
+
+Structure follows arXiv:2405.21060: in_proj -> [z | x | B | C | dt], short
+causal conv over (x,B,C), per-head scalar decay a_t = exp(-softplus(dt) *
+exp(A_log)), SSD recurrence S_t = a_t S_{t-1} + (dt*x_t) B_t^T with output
+C_t . S_t + D*x_t, gated RMSNorm, out_proj.  ngroups=1 (B,C shared across
+heads).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.param import ParamSpec
+from repro.nn.layers import ShardCtx, NO_SHARD
+from repro.nn.linear_attn import gla_chunked, gla_decode
+
+
+def dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    nheads = d_inner // ssm.head_dim
+    conv_ch = d_inner + 2 * ssm.state_dim        # x, B, C all convolved
+    return d_inner, nheads, conv_ch
+
+
+def mamba_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    d_inner, nheads, conv_ch = dims(cfg)
+    n = ssm.state_dim
+    proj_out = 2 * d_inner + 2 * n + nheads      # z, x, B, C, dt
+    return {
+        "in_proj": ParamSpec((d, proj_out), ("embed", "heads")),
+        "conv_w": ParamSpec((ssm.conv_width, conv_ch), (None, "heads"),
+                            scale=0.5),
+        "conv_b": ParamSpec((conv_ch,), ("heads",), init="zeros"),
+        "a_log": ParamSpec((nheads,), ("heads",), init="zeros"),
+        "dt_bias": ParamSpec((nheads,), ("heads",), init="zeros"),
+        "d_skip": ParamSpec((nheads,), ("heads",), init="ones"),
+        "norm_scale": ParamSpec((d_inner,), ("heads",), init="ones"),
+        "out_proj": ParamSpec((d_inner, d), ("heads", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """x: (B, S, C); w: (W, C) depthwise.  Returns (y, new_state (B, W-1, C))."""
+    width = w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(width))
+    y = jax.nn.silu((y + b.astype(x.dtype)).astype(jnp.float32)).astype(x.dtype)
+    return y, xp[:, -(width - 1):]
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, nheads, _ = dims(cfg)
+    n = cfg.ssm.state_dim
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    return z, xin, bmat, cmat, dt
+
+
+def _ssd_inputs(cfg, xin, bmat, cmat, dt, a_log, dt_bias):
+    """Map mamba tensors onto GLA (q,k,v,log_w)."""
+    b, s, _ = xin.shape
+    d_inner, nheads, _ = dims(cfg)
+    hd = cfg.ssm.head_dim
+    n = cfg.ssm.state_dim
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + dt_bias.astype(jnp.float32))
+    decay = -dt * jnp.exp(a_log.astype(jnp.float32))      # (B,S,H) log-decay
+    xh = jnp.reshape(xin, (b, s, nheads, hd))
+    v = xh * dt[..., None].astype(xh.dtype)               # dt-scaled input
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b, s, nheads, n))  # C
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b, s, nheads, n))  # B
+    log_w = jnp.broadcast_to(decay[..., None], (b, s, nheads, n))
+    return q, k, v, log_w, xh
+
+
+def _gated_norm(y, z, scale, eps=1e-5):
+    f32 = (y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)).astype(jnp.float32)
+    var = jnp.mean(jnp.square(f32), axis=-1, keepdims=True)
+    return (f32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(y.dtype)
+
+
+def mamba_block(p, x, cfg: ModelConfig, *, state=None,
+                ctx: ShardCtx = NO_SHARD, dtype=jnp.bfloat16):
+    """Full-sequence SSD.  state: None or (conv_state, ssm_state).
+    Returns (out (B,S,D), (conv_state, ssm_state))."""
+    d_inner, nheads, conv_ch = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(dtype))
+    z, xin, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_state = None if state is None else state[0]
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        conv_state)
+    xin, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + cfg.ssm.state_dim],
+                                axis=-1)
+    q, k, v, log_w, xh = _ssd_inputs(cfg, xin, bmat, cmat, dt,
+                                     p["a_log"], p["dt_bias"])
+    ssm_state = None if state is None else state[1]
+    y, s_final = gla_chunked(q, k, v, log_w, chunk=cfg.ssm.chunk,
+                             variant="mamba", initial_state=ssm_state)
+    y = y + xh * p["d_skip"].astype(xh.dtype)[None, None, :, None]
+    b, s, _ = x.shape
+    y = jnp.reshape(y, (b, s, d_inner))
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bsp,pd->bsd", y, p["out_proj"].astype(dtype))
+    return out, (conv_state, s_final)
+
+
+def mamba_decode(p, x, cfg: ModelConfig, *, state, dtype=jnp.bfloat16):
+    """x: (B,1,D); state = (conv_state (B,W-1,C), ssm_state (B,H,N,hd))."""
+    d_inner, nheads, conv_ch = dims(cfg)
+    zxbcdt = jnp.einsum("bsd,dp->bsp", x, p["in_proj"].astype(dtype))
+    z, xin, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                        state[0])
+    xin, bmat, cmat = jnp.split(conv_out, [d_inner, d_inner + cfg.ssm.state_dim],
+                                axis=-1)
+    q, k, v, log_w, xh = _ssd_inputs(cfg, xin, bmat, cmat, dt,
+                                     p["a_log"], p["dt_bias"])
+    y, s_new = gla_decode(q[:, 0], k[:, 0], v[:, 0], log_w[:, 0], state[1],
+                          variant="mamba")
+    y = y + xh[:, 0] * p["d_skip"].astype(xh.dtype)[None, :, None]
+    b = x.shape[0]
+    y = jnp.reshape(y, (b, 1, d_inner))
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = jnp.einsum("bsp,pd->bsd", y, p["out_proj"].astype(dtype))
+    return out, (conv_state, s_new)
+
+
+def init_mamba_state(batch: int, cfg: ModelConfig, dtype=jnp.bfloat16):
+    d_inner, nheads, conv_ch = dims(cfg)
+    return (jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_ch), dtype),
+            jnp.zeros((batch, nheads, cfg.ssm.state_dim, cfg.ssm.head_dim),
+                      jnp.float32))
+
+
+def mamba_state_specs(batch: int, cfg: ModelConfig, dtype="bfloat16"):
+    d_inner, nheads, conv_ch = dims(cfg)
+    return (ParamSpec((batch, cfg.ssm.conv_width - 1, conv_ch),
+                      ("batch", None, "heads"), init="zeros", dtype=dtype),
+            ParamSpec((batch, nheads, cfg.ssm.state_dim, cfg.ssm.head_dim),
+                      ("batch", "heads", "state", None), init="zeros",
+                      dtype="float32"))

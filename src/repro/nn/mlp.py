@@ -1,0 +1,36 @@
+"""Dense MLPs: SwiGLU / GeGLU / plain GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.param import ParamSpec
+from repro.nn.layers import ShardCtx, NO_SHARD
+
+
+def mlp_specs(d_model: int, d_ff: int, activation: str):
+    if activation in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+            "wi_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+            "wo": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "wo": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x, activation: str, ctx: ShardCtx = NO_SHARD,
+        dtype=jnp.bfloat16):
+    if activation in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, params["wi_gate"].astype(dtype))
+        u = jnp.einsum("bsd,df->bsf", x, params["wi_up"].astype(dtype))
+        act = jax.nn.silu if activation == "swiglu" else \
+            (lambda t: jax.nn.gelu(t, approximate=True))
+        h = act(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, params["wi"].astype(dtype))
+        h = jax.nn.gelu(h, approximate=True)
+    h = ctx.constrain(h, "batch", None, "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, params["wo"].astype(dtype))

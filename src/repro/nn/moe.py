@@ -1,0 +1,101 @@
+"""Top-k Mixture-of-Experts with grouped, capacity-bounded, sort-free
+dispatch (GShard-style cumsum positions; groups follow the batch sharding so
+dispatch bookkeeping stays shard-local).  Compute cost is
+~ tokens * top_k * capacity_factor * expert-MLP FLOPs, i.e. close to the
+*active* parameter FLOPs — important for an honest roofline (a dense
+all-experts dispatch would inflate HLO FLOPs by E/k).
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.nn.param import ParamSpec
+from repro.nn.layers import ShardCtx, NO_SHARD
+
+
+def moe_specs(d_model: int, d_ff: int, moe: MoEConfig, activation: str):
+    e = moe.num_experts
+    specs = {
+        "router": ParamSpec((d_model, e), ("embed", None), scale=0.1),
+        "wo": ParamSpec((e, d_ff, d_model), ("experts", "mlp", "embed")),
+    }
+    if activation in ("swiglu", "geglu"):
+        specs["wi_gate"] = ParamSpec((e, d_model, d_ff), ("experts", "embed", "mlp"))
+        specs["wi_up"] = ParamSpec((e, d_model, d_ff), ("experts", "embed", "mlp"))
+    else:
+        specs["wi"] = ParamSpec((e, d_model, d_ff), ("experts", "embed", "mlp"))
+    return specs
+
+
+def _expert_mlp(params, h, activation: str, dtype):
+    """h: (G, E, C, D) -> (G, E, C, D)."""
+    if "wi_gate" in params:
+        g = jnp.einsum("gecd,edf->gecf", h, params["wi_gate"].astype(dtype))
+        u = jnp.einsum("gecd,edf->gecf", h, params["wi_up"].astype(dtype))
+        act = jax.nn.silu if activation == "swiglu" else \
+            (lambda t: jax.nn.gelu(t, approximate=True))
+        z = act(g) * u
+    else:
+        z = jnp.einsum("gecd,edf->gecf", h, params["wi"].astype(dtype))
+        z = jax.nn.gelu(z, approximate=True)
+    return jnp.einsum("gecf,efd->gecd", z, params["wo"].astype(dtype))
+
+
+def moe_mlp(params, x, moe: MoEConfig, activation: str,
+            ctx: ShardCtx = NO_SHARD, dtype=jnp.bfloat16
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D).  Returns (y, aux_loss).  Groups = batch rows."""
+    b, s, d = x.shape
+    e, k = moe.num_experts, moe.top_k
+    cap = max(1, int(math.ceil(s * k / e * moe.capacity_factor)))
+
+    # (Perf note: forcing the residual's TP shard to resolve here —
+    # constrain(x, 'batch', None, None) — was hypothesized to beat GSPMD's
+    # own gather placement at the expert einsum; measured on grok-1 it was
+    # WORSE on both HBM (+15%) and collective (+16%) traffic, so we leave
+    # placement to GSPMD.  See EXPERIMENTS.md §Perf iteration B3.)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                     # (B,S,E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)             # (B,S,k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch/GShard load-balance auxiliary loss.
+    density = jnp.mean(
+        jax.nn.one_hot(expert_ids[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(density * mean_probs) * moe.router_aux_weight
+
+    # ---- grouped dispatch (group = batch row) ----
+    flat_e = jnp.reshape(expert_ids, (b, s * k))                # (B, N)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)         # (B, N, E)
+    pos = jnp.cumsum(onehot, axis=1) - 1                        # position/expert
+    pos = jnp.sum(pos * onehot, axis=-1)                        # (B, N)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)         # trash slot
+
+    x_rep = jnp.repeat(x, k, axis=1)                            # (B, N, D)
+    disp = jnp.zeros((b, e * cap + 1, d), dtype)
+    gidx = jnp.arange(b)[:, None]
+    disp = disp.at[gidx, slot].add(x_rep.astype(dtype))
+    h = jnp.reshape(disp[:, : e * cap], (b, e, cap, d))
+    h = ctx.constrain(h, "batch", "experts", None, None)
+
+    y_exp = _expert_mlp(params, h, activation, dtype)           # (B,E,C,D)
+    y_exp = ctx.constrain(y_exp, "batch", "experts", None, None)
+
+    y_flat = jnp.concatenate(
+        [jnp.reshape(y_exp, (b, e * cap, d)),
+         jnp.zeros((b, 1, d), dtype)], axis=1)
+    y_rep = y_flat[gidx, slot]                                  # (B, N, D)
+    y_rep = jnp.reshape(y_rep, (b, s, k, d))
+    gates = jnp.reshape(gate_vals, (b, s, k, 1)).astype(dtype)
+    y = jnp.sum(y_rep * gates, axis=2)
+    return y, aux.astype(jnp.float32)

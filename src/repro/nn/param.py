@@ -1,0 +1,101 @@
+"""Parameter-spec machinery.
+
+Models declare a *spec tree*: nested dicts whose leaves are ``ParamSpec``
+(shape + logical axes + initializer).  The same tree then serves three
+purposes:
+
+  * ``materialize(specs, key)``      -> real arrays (training / smoke tests)
+  * ``abstract(specs)``              -> ShapeDtypeStructs (dry-run, no alloc)
+  * ``logical_axes(specs)``          -> tree of logical-axis tuples, which
+                                        ``nn.sharding`` maps onto a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis name per dim (or None)
+    init: str = "normal"                 # normal|zeros|ones|embed|scaled
+    scale: float = 1.0                   # stddev multiplier / fan-in override
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(spec: ParamSpec, key) -> jax.Array:
+    dtype = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        std = spec.scale
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+    # fan-in scaled normal (lecun) for matmul kernels: last dim = fan-out,
+    # contract over all leading dims.
+    fan_in = max(1, math.prod(spec.shape[:-1]))
+    std = spec.scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(dtype)
+
+
+def materialize(specs, key):
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract(specs):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=is_spec)
+
+
+def logical_axes(specs):
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: is_spec(x) or hasattr(x, "shape"))
+    return int(sum(math.prod(l.shape) for l in leaves))
+
+
+def tree_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: is_spec(x) or hasattr(x, "shape"))
+    out = 0
+    for l in leaves:
+        dt = jnp.dtype(getattr(l, "dtype", "float32"))
+        out += math.prod(l.shape) * dt.itemsize
+    return int(out)
+
+
+def flatten_to_vector(tree) -> jax.Array:
+    """Concatenate every leaf into one 1-D vector (alpha-combine transport)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.concatenate([jnp.ravel(l).astype(jnp.float32) for l in leaves])
+
+
+def unflatten_from_vector(vec: jax.Array, like_tree):
+    leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    out, off = [], 0
+    for l in leaves:
+        n = math.prod(l.shape)
+        out.append(jnp.reshape(vec[off:off + n], l.shape).astype(l.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,130 @@
+"""RWKV6 ("Finch") block: data-dependent-decay time-mix + channel-mix.
+
+Faithful to arXiv:2404.05892 structure: token-shift lerps with learned
+per-channel mixes, a low-rank (LoRA) data-dependent decay
+w_t = exp(-softplus(w0 + tanh(x_w A) B)), per-channel bonus u, WKV recurrence
+(our GLA primitive, 'rwkv' variant), per-head group-norm, silu(g) gating.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn.param import ParamSpec
+from repro.nn.layers import ShardCtx, NO_SHARD
+from repro.nn.linear_attn import gla_chunked, gla_decode
+
+LORA = 64
+
+
+def time_mix_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.num_heads
+    hd = cfg.resolved_head_dim()
+    assert h * hd == d, "rwkv6 requires heads*head_dim == d_model"
+    mixes = {f"mu_{n}": ParamSpec((d,), ("embed",), init="ones", scale=0.5)
+             for n in ("r", "k", "v", "g", "w")}
+    return {
+        **mixes,
+        "wr": ParamSpec((d, d), ("embed", "heads")),
+        "wk": ParamSpec((d, d), ("embed", "heads")),
+        "wv": ParamSpec((d, d), ("embed", "heads")),
+        "wg": ParamSpec((d, d), ("embed", "heads")),
+        "w0": ParamSpec((d,), ("embed",), init="zeros"),
+        "w_lora_a": ParamSpec((d, LORA), ("embed", None), scale=0.1),
+        "w_lora_b": ParamSpec((LORA, d), (None, "embed"), scale=0.1),
+        "bonus": ParamSpec((h, hd), ("heads", "qkv"), init="zeros"),
+        "ln_scale": ParamSpec((h, hd), ("heads", "qkv"), init="ones"),
+        "wo": ParamSpec((d, d), ("heads", "embed")),
+    }
+
+
+def channel_mix_specs(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), init="ones", scale=0.5),
+        "mu_r": ParamSpec((d,), ("embed",), init="ones", scale=0.5),
+        "wk": ParamSpec((d, f), ("embed", "mlp")),
+        "wv": ParamSpec((f, d), ("mlp", "embed")),
+        "wr": ParamSpec((d, d), ("embed", "embed")),
+    }
+
+
+def _shift(x, prev):
+    """x: (B,S,D); prev: (B,D) last token of previous segment."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _lerp(x, shifted, mu):
+    return x + (shifted - x) * mu.astype(x.dtype)
+
+
+def _group_norm(y, scale, eps=1e-5):
+    """y: (B,S,H,hd) per-head layer norm (rwkv's GroupNorm)."""
+    f32 = y.astype(jnp.float32)
+    mean = jnp.mean(f32, axis=-1, keepdims=True)
+    var = jnp.var(f32, axis=-1, keepdims=True)
+    out = (f32 - mean) * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(y.dtype)
+
+
+def _rkvgw(p, x, xs, h, hd, dtype):
+    xr = _lerp(x, xs, p["mu_r"]); xk = _lerp(x, xs, p["mu_k"])
+    xv = _lerp(x, xs, p["mu_v"]); xg = _lerp(x, xs, p["mu_g"])
+    xw = _lerp(x, xs, p["mu_w"])
+    b, s, d = x.shape
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dtype)).reshape(b, s, h, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dtype)).reshape(b, s, h, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dtype)).reshape(b, s, h, hd)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dtype))
+    lora_h = jnp.tanh(jnp.einsum("bsd,dl->bsl", xw.astype(jnp.float32),
+                                 p["w_lora_a"].astype(jnp.float32)))
+    lora = jnp.einsum("bsl,le->bse", lora_h, p["w_lora_b"].astype(jnp.float32))
+    log_w = -jax.nn.softplus(p["w0"].astype(jnp.float32) + lora)  # (B,S,D) <=0
+    log_w = log_w.reshape(b, s, h, hd)
+    return r, k, v, g, log_w
+
+
+def time_mix(p, x, cfg: ModelConfig, *, prev_x, state,
+             ctx: ShardCtx = NO_SHARD, dtype=jnp.bfloat16):
+    """Full-sequence WKV.  prev_x: (B,D); state: (B,H,hd,hd) or None."""
+    h, hd = cfg.num_heads, cfg.resolved_head_dim()
+    xs = _shift(x, prev_x)
+    r, k, v, g, log_w = _rkvgw(p, x, xs, h, hd, dtype)
+    y, s_final = gla_chunked(r, k, v, log_w, chunk=cfg.ssm.chunk,
+                             variant="rwkv", bonus=p["bonus"],
+                             initial_state=state)
+    y = _group_norm(y, p["ln_scale"])
+    b, s, d = x.shape
+    y = jnp.reshape(y, (b, s, d)) * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dtype))
+    return out, (x[:, -1], s_final)
+
+
+def time_mix_decode(p, x, cfg: ModelConfig, *, prev_x, state,
+                    dtype=jnp.bfloat16):
+    """x: (B,1,D) single step."""
+    h, hd = cfg.num_heads, cfg.resolved_head_dim()
+    xs = prev_x[:, None]
+    r, k, v, g, log_w = _rkvgw(p, x, xs, h, hd, dtype)
+    y, s_new = gla_decode(r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], state,
+                          variant="rwkv", bonus=p["bonus"])
+    y = _group_norm(y[:, None], p["ln_scale"])
+    b = x.shape[0]
+    y = jnp.reshape(y, (b, 1, -1)) * jax.nn.silu(g.astype(jnp.float32)).astype(y.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(dtype))
+    return out, (x[:, -1], s_new)
+
+
+def channel_mix(p, x, *, prev_x, dtype=jnp.bfloat16):
+    xs = _shift(x, prev_x)
+    xk = _lerp(x, xs, p["mu_k"]); xr = _lerp(x, xs, p["mu_r"])
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"].astype(dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dtype))
+                       .astype(jnp.float32)).astype(dtype)
+    return r * vv, x[:, -1]

@@ -1,0 +1,183 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style).
+
+Rules are an ordered list ``(logical_name, candidate mesh axes)``.  Resolution
+walks each array dim: the first candidate mesh axis that (a) exists in the
+mesh, (b) is not already used by another dim of the same array, and (c)
+divides the dim size, is taken; otherwise the dim is replicated.  This gives
+divisibility-safe fallback (e.g. kv_heads=8 on a model=16 axis -> replicate,
+kv_heads=32 -> shard).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.nn import param as param_lib
+
+Rules = List[Tuple[str, Tuple[str, ...]]]
+
+# Baseline (paper-faithful / standard FSDP+TP) rule set.
+DEFAULT_RULES: Rules = [
+    ("batch",    ("pod", "data")),
+    ("clients",  ("data",)),          # FL client axis in decentralized runtime
+    ("vocab",    ("model",)),
+    ("embed",    ("data",)),          # FSDP shard of the contracting dim
+    ("embed_act", ("model",)),        # residual-stream activations: TP shard
+    ("mlp",      ("model",)),
+    ("heads",    ("model",)),
+    ("kv_heads", ("model",)),
+    ("qkv",      ()),                 # head_dim: replicated
+    ("experts",  ("expert",)),        # only if an expert axis exists
+    ("layers",   ()),                 # scan-stacked leading dim: replicated
+    ("state",    ()),
+    ("seq",      ()),
+    ("kv_seq",   ()),
+]
+
+# Hillclimb variants (see EXPERIMENTS.md §Perf).
+EXPERT_PARALLEL_RULES: Rules = [
+    ("batch",    ("pod", "data")),
+    ("clients",  ("data",)),
+    ("vocab",    ("model",)),
+    ("experts",  ("data",)),          # expert-parallel over the data axis
+    ("embed",    ("data",)),
+    ("embed_act", ("model",)),
+    ("mlp",      ("model",)),
+    ("heads",    ("model",)),
+    ("kv_heads", ("model",)),
+    ("qkv",      ()),
+    ("layers",   ()),
+    ("state",    ()),
+    ("seq",      ()),
+    ("kv_seq",   ()),
+]
+
+SEQ_PARALLEL_RULES: Rules = DEFAULT_RULES[:-2] + [
+    ("seq",      ("model",)),         # long-context: shard sequence
+    ("kv_seq",   ("model",)),
+]
+
+# Pure FSDP (ZeRO-3-style): batch sharded over EVERY mesh axis, parameters
+# sharded (embed->data, mlp/heads->model) and all-gathered just-in-time at
+# use; no tensor-parallel sharding of the residual stream.  For models far
+# smaller than the pod (llama3.2-1b on 256 chips) this trades the per-layer
+# activation all-reduces of TP for much smaller parameter gathers.
+FSDP_RULES: Rules = [
+    ("batch",    ("pod", "data", "model")),
+    ("clients",  ("data",)),
+    ("vocab",    ("model",)),
+    ("embed",    ("data",)),
+    ("embed_act", ()),                # residual stream: no TP
+    ("mlp",      ("model",)),
+    ("heads",    ("model",)),
+    ("kv_heads", ("model",)),
+    ("qkv",      ()),
+    ("experts",  ()),
+    ("layers",   ()),
+    ("state",    ()),
+    ("seq",      ()),
+    ("kv_seq",   ()),
+]
+
+RULE_SETS: Dict[str, Rules] = {
+    "default": DEFAULT_RULES,
+    "expert_parallel": EXPERT_PARALLEL_RULES,
+    "seq_parallel": SEQ_PARALLEL_RULES,
+    "fsdp": FSDP_RULES,
+}
+
+
+def spec_for(shape: Sequence[int], axes: Sequence[Optional[str]],
+             mesh: Mesh, rules: Rules) -> P:
+    rule_map = dict(rules)
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, axes):
+        assigned = None
+        if name == "batch":
+            # batch may span several mesh axes jointly (pod x data) — e.g.
+            # decode KV caches: without this, a (2,16,16) mesh shards the
+            # cache batch only 2-way over 'pod' and residency blows up 16x.
+            multi = []
+            size = 1
+            for cand in rule_map.get(name, ()):
+                if cand in mesh.shape and cand not in used \
+                        and mesh.shape[cand] > 1 \
+                        and dim % (size * mesh.shape[cand]) == 0:
+                    multi.append(cand)
+                    used.add(cand)
+                    size *= mesh.shape[cand]
+            assigned = tuple(multi) if multi else None
+        elif name is not None:
+            for cand in rule_map.get(name, ()):  # ordered candidates
+                if cand in mesh.shape and cand not in used \
+                        and dim % mesh.shape[cand] == 0 and mesh.shape[cand] > 1:
+                    assigned = cand
+                    used.add(cand)
+                    break
+        out.append(assigned)
+    # trim trailing Nones for tidier specs
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def tree_pspecs(specs_tree, mesh: Mesh, rules: Rules):
+    """ParamSpec tree -> PartitionSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda s: spec_for(s.shape, s.axes, mesh, rules),
+        specs_tree, is_leaf=param_lib.is_spec)
+
+
+def tree_shardings(specs_tree, mesh: Mesh, rules: Rules):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, spec_for(s.shape, s.axes, mesh, rules)),
+        specs_tree, is_leaf=param_lib.is_spec)
+
+
+def activation_spec(mesh: Mesh, rules: Rules, *axes: Optional[str],
+                    dims: Optional[Sequence[int]] = None) -> P:
+    """PartitionSpec for an activation with the given logical axes.
+
+    ``batch`` may map to multiple mesh axes (pod+data) which PartitionSpec
+    expresses as a tuple entry.
+    """
+    rule_map = dict(rules)
+    used: set = set()
+    out = []
+    for i, name in enumerate(axes):
+        if name is None:
+            out.append(None)
+            continue
+        cands = [c for c in rule_map.get(name, ())
+                 if c in mesh.shape and c not in used and mesh.shape[c] > 1]
+        if dims is not None:
+            cands = [c for c in cands if dims[i] % mesh.shape[c] == 0]
+        if name == "batch":
+            # use every available candidate jointly (pod, data)
+            multi = []
+            size = 1
+            for c in cands:
+                if dims is None or dims[i] % (size * mesh.shape[c]) == 0:
+                    multi.append(c)
+                    size *= mesh.shape[c]
+                    used.add(c)
+            out.append(tuple(multi) if multi else None)
+        else:
+            out.append(cands[0] if cands else None)
+            if cands:
+                used.add(cands[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x, mesh: Mesh, rules: Rules, *axes: Optional[str]):
+    """with_sharding_constraint by logical axes (no-op outside mesh ctx)."""
+    try:
+        spec = activation_spec(mesh, rules, *axes, dims=x.shape)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, sgd, adamw, apply_updates, global_norm, clip_by_global_norm,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant, linear_warmup_cosine, linear_warmup_linear_decay,
+)

@@ -1,0 +1,133 @@
+"""Optimizers in pure JAX (optax is unavailable offline).
+
+An ``Optimizer`` is an (init, update) pair over pytrees, matching the optax
+calling convention so the training loops read familiarly:
+
+    opt = adamw(lr_schedule, weight_decay=0.1)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All state lives in pytrees with the same structure as the params so pjit
+shards optimizer state exactly like parameters (FSDP-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]   # step -> lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    """SGD(+momentum) — the paper's local training optimizer (Sec. V)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        mu = (jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            if momentum else None)
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32),
+                state["mu"], grads)
+            if nesterov:
+                upd = jax.tree_util.tree_map(
+                    lambda m, g: -(lr_t * (momentum * m + g.astype(jnp.float32))),
+                    mu, grads)
+            else:
+                upd = jax.tree_util.tree_map(lambda m: -lr_t * m, mu)
+            return upd, {"step": step, "mu": mu}
+        upd = jax.tree_util.tree_map(
+            lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return upd, {"step": step, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          mask: Optional[Callable[[Any], Any]] = None,
+          state_dtype=jnp.float32) -> Optimizer:
+    """AdamW with optional weight-decay mask (True leaves get decayed).
+
+    ``state_dtype=bfloat16`` halves optimizer-state HBM (the production
+    setting for the 100B+ configs on 16 GB/chip v5e; moments are
+    accumulated in fp32 and stored rounded)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)  # noqa: E731
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree_util.tree_map(z, params),
+                "v": jax.tree_util.tree_map(z, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step)
+        t = step.astype(jnp.float32)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        m = jax.tree_util.tree_map(
+            lambda mm, g: (b1 * mm.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)
+                           ).astype(state_dtype), state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: (b2 * vv.astype(jnp.float32) + (1 - b2)
+                           * jnp.square(g.astype(jnp.float32))
+                           ).astype(state_dtype), state["v"], grads)
+        wd_tree = (mask(params) if mask is not None
+                   else jax.tree_util.tree_map(lambda p: p.ndim >= 2, params))
+
+        def upd(mm, vv, p, use_wd):
+            mm = mm.astype(jnp.float32)
+            vv = vv.astype(jnp.float32)
+            step_dir = (mm / c1) / (jnp.sqrt(vv / c2) + eps)
+            if weight_decay:
+                step_dir = step_dir + jnp.where(
+                    use_wd, weight_decay, 0.0) * p.astype(jnp.float32)
+            return -lr_t * step_dir
+
+        updates = jax.tree_util.tree_map(upd, m, v, params, wd_tree)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,38 @@
+"""Learning-rate schedules (step -> lr, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup_cosine(peak: float, warmup: int, total: int,
+                         floor: float = 0.0):
+    warmup = max(warmup, 1)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / warmup
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = floor + (peak - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def linear_warmup_linear_decay(peak: float, warmup: int, total: int,
+                               floor: float = 0.0):
+    warmup = max(warmup, 1)
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / warmup
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        lin = peak + (floor - peak) * frac
+        return jnp.where(step < warmup, warm, lin)
+
+    return sched

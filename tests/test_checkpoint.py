@@ -1,0 +1,45 @@
+"""npz pytree checkpointing."""
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, restore_checkpoint, \
+    save_checkpoint
+
+
+def _tree():
+    return {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nested": {"b": np.ones((4,), np.int32)},
+            "list": [np.zeros((2,)), np.full((1,), 7.0)]}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    save_checkpoint(d, 5, t, metadata={"loss": 1.25})
+    out = restore_checkpoint(d, t)
+    assert np.allclose(out["a"], t["a"])
+    assert np.allclose(out["nested"]["b"], t["nested"]["b"])
+    assert np.allclose(out["list"][1], 7.0)
+
+
+def test_latest_step_and_multiple(tmp_path):
+    d = str(tmp_path)
+    assert latest_step(d) is None
+    save_checkpoint(d, 1, _tree())
+    save_checkpoint(d, 12, _tree())
+    assert latest_step(d) == 12
+    restore_checkpoint(d, _tree())       # restores step 12 by default
+
+
+def test_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": np.zeros((2,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, {"a": np.zeros((3,))})
+
+
+def test_missing_leaf_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": np.zeros((2,))})
+    with pytest.raises(KeyError):
+        restore_checkpoint(d, {"a": np.zeros((2,)), "b": np.zeros((1,))})

@@ -1,0 +1,91 @@
+"""launch/ machinery: roofline analytics, step bundles, hardware table."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.launch.mesh import HW, make_local_mesh
+from repro.launch.roofline import (count_params_from_cfg, derive_roofline,
+                                   model_flops)
+
+
+def test_hw_constants():
+    assert HW["peak_flops_bf16"] == 197e12
+    assert HW["hbm_bw"] == 819e9
+    assert HW["ici_bw"] == 50e9
+
+
+def test_param_counts_dense():
+    cfg = get_config("llama3.2-1b")
+    n = count_params_from_cfg(cfg)
+    # llama3.2-1b is ~1.24B params
+    assert 1.0e9 < n["total"] < 1.6e9
+    assert n["active"] == n["total"]
+
+
+def test_param_counts_moe_active_less_than_total():
+    cfg = get_config("grok-1-314b")
+    n = count_params_from_cfg(cfg)
+    assert 2.5e11 < n["total"] < 3.7e11            # ~314B
+    assert n["active"] < 0.45 * n["total"]          # top-2 of 8 experts
+
+
+def test_model_flops_scaling():
+    cfg = get_config("llama3.2-1b")
+    tr = model_flops(cfg, INPUT_SHAPES["train_4k"])
+    pf = model_flops(cfg, INPUT_SHAPES["prefill_32k"])
+    de = model_flops(cfg, INPUT_SHAPES["decode_32k"])
+    assert tr == pytest.approx(3 * tr / 3)
+    # train is 6ND on 1.05M tokens; prefill 2ND on the same token count
+    assert tr / pf == pytest.approx(3.0, rel=1e-6)
+    # decode: one token x batch
+    assert de < pf / 1000
+
+
+def test_derive_roofline_dominance():
+    cfg = get_config("llama3.2-1b")
+    rl = derive_roofline(cfg, INPUT_SHAPES["train_4k"], chips=256,
+                         hlo_flops_per_device=1e14,
+                         hlo_bytes_per_device=1e10,
+                         collective_bytes_per_device=1e9)
+    assert rl.dominant == "compute"
+    rl2 = derive_roofline(cfg, INPUT_SHAPES["train_4k"], chips=256,
+                          hlo_flops_per_device=1e12,
+                          hlo_bytes_per_device=1e13,
+                          collective_bytes_per_device=1e9)
+    assert rl2.dominant == "memory"
+    assert 0 < rl.usefulness
+
+
+def test_opt_state_shardings_structure():
+    from jax.sharding import NamedSharding, PartitionSpec
+    from repro.launch.steps import make_train_bundle
+    from repro.configs.base import InputShape
+    from repro.nn.sharding import RULE_SETS
+    cfg = get_config("repro-100m").reduced(num_layers=2, d_model=128)
+    mesh = make_local_mesh()
+    b = make_train_bundle(cfg, InputShape("t", 32, 2, "train"), mesh,
+                          RULE_SETS["default"])
+    params_shard, opt_shard, batch_shard = b.in_shardings
+    assert isinstance(opt_shard["step"], NamedSharding)
+    assert opt_shard["step"].spec == PartitionSpec()
+    # m/v mirror params structure
+    import jax
+    assert jax.tree_util.tree_structure(opt_shard["m"]) == \
+        jax.tree_util.tree_structure(params_shard)
+
+
+def test_param_dtype_plumbing():
+    import dataclasses
+    import jax
+    from repro.launch.steps import make_train_bundle
+    from repro.configs.base import InputShape
+    from repro.nn.sharding import RULE_SETS
+    cfg = dataclasses.replace(
+        get_config("repro-100m").reduced(num_layers=2, d_model=128),
+        param_dtype="bfloat16")
+    mesh = make_local_mesh()
+    b = make_train_bundle(cfg, InputShape("t", 32, 2, "train"), mesh,
+                          RULE_SETS["default"])
+    leaves = jax.tree_util.tree_leaves(b.abstract_args[0])
+    assert all(l.dtype == jnp.bfloat16 for l in leaves)

@@ -1,0 +1,88 @@
+"""Logical-axis sharding rules: divisibility fallback + activation specs.
+Uses a small host mesh (no forced device count — CPU has 1 device, so we
+construct abstract Mesh objects over a fake 4-device grid when available,
+else assert the no-op paths)."""
+import numpy as np
+import pytest
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.nn.param import ParamSpec
+from repro.nn.sharding import (DEFAULT_RULES, RULE_SETS, activation_spec,
+                               spec_for, tree_pspecs)
+
+
+def _mesh_1d():
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(devs, ("data", "model"))
+
+
+def test_single_device_mesh_replicates_everything():
+    mesh = _mesh_1d()
+    spec = spec_for((128, 256), ("embed", "mlp"), mesh, DEFAULT_RULES)
+    assert spec == P()       # axes of size 1 are never used
+
+
+class FakeMesh:
+    """Duck-typed mesh exposing .shape for pure rule-resolution tests."""
+    def __init__(self, shape):
+        self.shape = shape
+
+
+def test_divisibility_fallback():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # kv_heads = 8 does not divide 16 -> replicated
+    spec = spec_for((1024, 8, 64), ("embed", "kv_heads", "qkv"),
+                    mesh, DEFAULT_RULES)
+    assert spec == P("data")
+    # kv_heads = 32 divides 16 -> sharded
+    spec2 = spec_for((1024, 32, 64), ("embed", "kv_heads", "qkv"),
+                     mesh, DEFAULT_RULES)
+    assert spec2 == P("data", "model")
+
+
+def test_no_axis_reuse_within_array():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # both dims want 'model' (vocab then mlp): only one gets it
+    spec = spec_for((1024, 512), ("vocab", "mlp"), mesh, DEFAULT_RULES)
+    assert list(spec).count("model") <= 1
+
+
+def test_experts_rule_set():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    ep = RULE_SETS["expert_parallel"]
+    spec = spec_for((16, 1024, 512), ("experts", "embed", "mlp"), mesh, ep)
+    assert spec[0] == "data"          # experts sharded over data axis
+    spec_d = spec_for((16, 1024, 512), ("experts", "embed", "mlp"), mesh,
+                      DEFAULT_RULES)
+    assert spec_d[0] is None          # no 'expert' axis in mesh -> replicated
+
+
+def test_activation_spec_batch_multi_axis():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = activation_spec(mesh, DEFAULT_RULES, "batch", None, "embed_act",
+                           dims=(256, 4096, 2048))
+    assert spec[0] == ("pod", "data")
+    assert spec[2] == "model"
+
+
+def test_activation_spec_respects_divisibility():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # batch 8: divisible by pod(2) then 8%(2*16)!=0 -> only pod
+    spec = activation_spec(mesh, DEFAULT_RULES, "batch", None,
+                           dims=(8, 128))
+    assert spec[0] in (("pod", "data"), ("pod",), "pod")
+    b = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+    total = 1
+    for ax in b:
+        total *= mesh.shape[ax]
+    assert 8 % total == 0
+
+
+def test_tree_pspecs():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    tree = {"w": ParamSpec((1024, 512), ("embed", "mlp")),
+            "b": ParamSpec((512,), ("mlp",))}
+    specs = tree_pspecs(tree, mesh, DEFAULT_RULES)
+    assert specs["w"] == P("data", "model")
+    assert specs["b"] == P("model")
