@@ -11,7 +11,8 @@ import traceback
 
 from benchmarks.common import save_rows
 
-BENCHES = ["fig4", "fig5", "fig6", "fig8", "fig9", "table2", "roofline"]
+BENCHES = ["fig4", "fig5", "fig6", "fig8", "fig9", "table2", "roofline",
+           "sim_warmstart"]
 
 
 def _module(name: str):
@@ -24,6 +25,7 @@ def _module(name: str):
         "fig9": "benchmarks.fig9_psi_baselines",
         "table2": "benchmarks.table2_bound_tightness",
         "roofline": "benchmarks.roofline_table",
+        "sim_warmstart": "benchmarks.sim_warmstart",
     }[name]
     return importlib.import_module(mod)
 

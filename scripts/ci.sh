@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the pytest suite, then a simulator smoke run so the repro.sim
+# subsystem (engine + scenarios + solver warm-start path + JSONL metrics)
+# is exercised end-to-end on every PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+
+python -m repro.sim.run --scenario channel-drift --devices 8 --rounds 2 \
+    --samples 40 --train-iters 10 --quiet \
+    --out "${REPRO_SIM_LOG:-results/sim/ci_smoke.jsonl}"
+
+echo "ci.sh: all green"

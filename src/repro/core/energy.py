@@ -49,6 +49,16 @@ class EnergyModel:
         np.fill_diagonal(k, 0.0)
         return cls(K=k, eps_e=eps_e)
 
+    def drift(self, rng: np.random.Generator,
+              sigma: float = 0.1) -> "EnergyModel":
+        """A drifted copy: multiplicative log-normal channel perturbation
+        K_ij <- K_ij * exp(N(0, sigma)) — the repro.sim ``channel-drift``
+        scenario's per-round step.  Log-normal keeps K positive and makes
+        sigma directly the per-round log-rate volatility."""
+        k = self.K * np.exp(rng.normal(0.0, sigma, size=self.K.shape))
+        np.fill_diagonal(k, 0.0)
+        return EnergyModel(K=k, eps_e=self.eps_e)
+
     def energy(self, alpha: np.ndarray) -> float:
         """Total network energy for link weights alpha (eq. 14 summed)."""
         a = np.asarray(alpha, float)

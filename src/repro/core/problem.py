@@ -58,14 +58,13 @@ class STLFProblem:
     def objective(self, psi: np.ndarray, alpha: np.ndarray) -> Dict[str, float]:
         """True (un-relaxed) objective of (P) at a 0/1-psi, simplex-alpha
         point — used for reporting and for baseline comparisons."""
-        n = self.n
         psi = np.asarray(psi, float)
         alpha = np.asarray(alpha, float)
         src_term = float(self.phi_s * np.sum((1.0 - psi) * self.S))
-        tgt = 0.0
-        for j in range(n):
-            for i in range(n):
-                tgt += psi[j] * (1.0 - psi[i]) * alpha[i, j] * self.T[i, j]
+        # term (d): sum_ij psi_j (1-psi_i) alpha_ij T_ij, vectorized so the
+        # polish loop stays cheap at N=64+ (it calls this O(N) times/round)
+        tgt = float(np.einsum("j,i,ij,ij->", psi, 1.0 - psi,
+                              alpha, self.T))
         e = self.energy.energy(alpha)
         # Equality-constraint absorption: (83) carries sum_j chi^C_j with
         # unit weight, and chi^C_j >= |sum_i alpha_ij - psi_j|; at a
@@ -102,4 +101,27 @@ class STLFProblem:
         chiT0 = psi0 * (1.0 - psi0) * a0 * self.T * 1.05 + 1e-4
         x[self.idx.chiT.ravel()] = chiT0.ravel()
         x[self.idx.chiC] = self.eps_c / 2.0
+        return x
+
+    def start_from(self, psi: np.ndarray, alpha: np.ndarray) -> np.ndarray:
+        """Warm-start iterate x0 from a previous (relaxed) solution.
+
+        psi/alpha are clipped into this problem's box and the auxiliary
+        chi variables are re-derived at their tight feasible values for the
+        CURRENT problem data (S, T may have drifted since the previous
+        solve) — exactly the feasible_start construction, evaluated at the
+        supplied point instead of the default interior point.
+        """
+        n = self.n
+        psi = np.clip(np.asarray(psi, float), self.eps_psi, 1.0)
+        alpha = np.clip(np.asarray(alpha, float), self.eps_alpha, 1.0)
+        x = np.zeros(self.idx.nvars)
+        x[self.idx.psi] = psi
+        x[self.idx.alpha.ravel()] = alpha.ravel()
+        x[self.idx.chiS] = (1.0 - psi) * self.S * 1.05 + 1e-3
+        chiT0 = psi[None, :] * (1.0 - psi[:, None]) * alpha * self.T \
+            * 1.05 + 1e-4
+        x[self.idx.chiT.ravel()] = chiT0.ravel()
+        d = alpha.sum(axis=0) - psi
+        x[self.idx.chiC] = np.maximum(np.abs(d), self.eps_c / 2.0)
         return x

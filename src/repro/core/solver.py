@@ -14,19 +14,32 @@ Constraint groups per iteration (log variables z, x = e^z):
   G3 (each j):      sum_i a_ij <= M+_hat_j(z), M+_j = chiC_j+eps_C+psi_j  (89)
   G4 (each j):      chiC_j + psi_j <= M-_hat_j(z) + eps_C, M-_j = sum a   (90)
 Objective (83): phiS sum chiS + phiT sum chiT + phiE sum K a / J_hat + sum chiC.
+
+Packing strategy (the scale refactor): every monomial term touches at most
+MAX_VARS_PER_TERM variables, so the program is packed ONCE per solve as
+sparse (log-coeff, var-index, exponent) triples — (G, T) + (G, T, K) arrays
+instead of the dense (G, T, nvars) exponent matrices that made N=64 networks
+(nvars = 3N + 2N^2 ~ 8.4k) infeasible.  The AGM weights are recomputed from
+the current iterate INSIDE the jitted inner solve (they are just a softmax
+of the denominator term log-values at z0), so the Python-level packing no
+longer runs once per outer iteration — one compiled function serves every
+outer iteration and every warm-started re-solve at the same network size.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.gp import Monomial, Posynomial, pack_posynomial, pack_monomial
+from repro.core.gp import Monomial, Posynomial
 from repro.core.problem import STLFProblem
+
+_NEG = -1e30                       # pad log-coeff: exp() == 0, softmax w == 0
+MAX_VARS_PER_TERM = 4
 
 
 @dataclasses.dataclass
@@ -39,31 +52,78 @@ class SolverResult:
     objective_parts: Dict[str, float]
     converged: bool
     outer_iters: int
+    # Full relaxed iterate x = e^z (chi auxiliaries included).  Passed back
+    # via solve_stlf(warm_start=...) it resumes the SCA exactly where the
+    # previous solve stopped; None on results not produced by solve_stlf.
+    x_relaxed: Optional[np.ndarray] = None
 
 
 # ---------------------------------------------------------------- packing
-def _build_iteration(prob: STLFProblem, z0: np.ndarray):
-    """AGM-approximate every violating term around z0; pack to arrays."""
+class PackedTerms(NamedTuple):
+    """Sparse monomial-term block: logc (G,T), vidx/vexp (G,T,K)."""
+    logc: jnp.ndarray
+    vidx: jnp.ndarray
+    vexp: jnp.ndarray
+
+
+class Family(NamedTuple):
+    """One constraint family num <= AGM(den) + extras, packed at the
+    family's NATURAL term width (padding G3's 63-term columns onto G2's
+    1-term groups is a ~30x waste at N=64)."""
+    num: PackedTerms
+    den: PackedTerms
+    ex: PackedTerms
+
+
+class PackedProgram(NamedTuple):
+    """Structure of (P) at fixed coefficients; AGM points are supplied at
+    solve time, so this packs once per solve (not once per outer iter).
+    NamedTuple => automatically a jax pytree."""
+    families: Tuple[Family, ...]
+    o_num: PackedTerms
+    o_den: PackedTerms
+
+
+def _pack_terms(groups: Sequence[Sequence[Monomial]], k: int) -> PackedTerms:
+    """Ragged term groups -> (logc (G,T), vidx (G,T,K), vexp (G,T,K))."""
+    g = len(groups)
+    t = max((len(terms) for terms in groups), default=1) or 1
+    logc = np.full((g, t), _NEG)
+    vidx = np.zeros((g, t, k), np.int32)
+    vexp = np.zeros((g, t, k), np.float64)
+    for gi, terms in enumerate(groups):
+        for ti, m in enumerate(terms):
+            logc[gi, ti] = max(m.log_c, _NEG)
+            items = list(m.exps.items())
+            assert len(items) <= k, f"term with {len(items)} vars exceeds K"
+            for ki, (v, p) in enumerate(items):
+                vidx[gi, ti, ki] = v
+                vexp[gi, ti, ki] = p
+    return PackedTerms(jnp.asarray(logc), jnp.asarray(vidx),
+                       jnp.asarray(vexp))
+
+
+def build_program(prob: STLFProblem) -> PackedProgram:
+    """Pack (P)'s constraint/objective structure to sparse arrays."""
     n, idx = prob.n, prob.idx
-    nv = idx.nvars
+    k = MAX_VARS_PER_TERM
 
-    num_logc, num_E, den_logc, den_E = [], [], [], []
+    def pack_family(rows) -> Family:
+        nums, dens, exs = zip(*rows)
+        return Family(_pack_terms(nums, k), _pack_terms(dens, k),
+                      _pack_terms(exs, k))
 
-    def add(num_p: Posynomial, den_terms: List[Tuple[float, np.ndarray]]):
-        lc, E = pack_posynomial(num_p, nv)
-        num_logc.append(lc); num_E.append(E)
-        dl = np.array([t[0] for t in den_terms])
-        dE = np.stack([t[1] for t in den_terms])
-        den_logc.append(dl); den_E.append(dE)
+    none: List[Monomial] = []
 
     # G1: 1 <= F_hat_i
+    g1 = []
     for i in range(n):
         F = Posynomial.var(idx.psi[i]) + \
             Posynomial.var(idx.chiS[i], coeff=1.0 / prob.S[i])
-        m = F.agm_monomial(z0)
-        add(Posynomial.const(1.0), [pack_monomial(m, nv)])
+        g1.append((Posynomial.const(1.0).terms, F.terms, none))
 
     # G2: T_ij <= H_hat_ij
+    g2 = []
     for i in range(n):
         for j in range(n):
             if i == j:
@@ -72,82 +132,111 @@ def _build_iteration(prob: STLFProblem, z0: np.ndarray):
                 Posynomial([Monomial(0.0, {idx.chiT[i, j]: 1.0,
                                            idx.psi[j]: -1.0,
                                            idx.alpha[i, j]: -1.0})])
-            m = H.agm_monomial(z0)
-            add(Posynomial.const(max(prob.T[i, j], 1e-9)),
-                [pack_monomial(m, nv)])
+            g2.append((Posynomial.const(max(prob.T[i, j], 1e-9)).terms,
+                       H.terms, none))
 
     # G3: sum_i a_ij <= M+_hat_j
+    g3 = []
     for j in range(n):
         col = Posynomial([Monomial(0.0, {idx.alpha[i, j]: 1.0})
                           for i in range(n) if i != j])
         Mp = Posynomial.var(idx.chiC[j]) + Posynomial.const(prob.eps_c) + \
             Posynomial.var(idx.psi[j])
-        m = Mp.agm_monomial(z0)
-        add(col, [pack_monomial(m, nv)])
+        g3.append((col.terms, Mp.terms, none))
 
     # G4: chiC_j + psi_j <= M-_hat_j + eps_C
+    g4 = []
     for j in range(n):
         num = Posynomial.var(idx.chiC[j]) + Posynomial.var(idx.psi[j])
         Mm = Posynomial([Monomial(0.0, {idx.alpha[i, j]: 1.0})
                          for i in range(n) if i != j])
-        m = Mm.agm_monomial(z0)
-        add(num, [pack_monomial(m, nv),
-                  (float(np.log(prob.eps_c)), np.zeros(nv))])
+        g4.append((num.terms, Mm.terms,
+                   Posynomial.const(prob.eps_c).terms))
 
-    def ragged_pack(logcs, Es):
-        T = max(len(l) for l in logcs)
-        L = np.full((len(logcs), T), -1e30)
-        M = np.zeros((len(logcs), T, nv))
-        for g, (l, e) in enumerate(zip(logcs, Es)):
-            L[g, :len(l)] = l
-            M[g, :len(l)] = e
-        return jnp.asarray(L), jnp.asarray(M)
+    # Objective (83): each group is num_monomial / AGM(den posynomial);
+    # chi terms carry the trivial denominator 1 (AGM of a constant is
+    # itself), energy terms carry J_ij = a_ij + eps_E.
+    o_num: List[List[Monomial]] = []
+    o_den: List[List[Monomial]] = []
+    one = Posynomial.const(1.0)
 
-    nl, nE = ragged_pack(num_logc, num_E)
-    dl, dE = ragged_pack(den_logc, den_E)
+    def add_obj(num: Monomial, den: Posynomial):
+        o_num.append([num])
+        o_den.append(den.terms)
 
-    # Objective posynomial (83); energy denominators J_ij AGM'd around z0.
-    obj = Posynomial([])
     for i in range(n):
-        obj = obj + Posynomial.var(idx.chiS[i], coeff=prob.phi_s)
+        if prob.phi_s > 0:
+            add_obj(Monomial(float(np.log(prob.phi_s)), {idx.chiS[i]: 1.0}),
+                    one)
     for i in range(n):
         for j in range(n):
-            if i != j:
-                obj = obj + Posynomial.var(idx.chiT[i, j], coeff=prob.phi_t)
+            if i != j and prob.phi_t > 0:
+                add_obj(Monomial(float(np.log(prob.phi_t)),
+                                 {idx.chiT[i, j]: 1.0}), one)
     for j in range(n):
-        obj = obj + Posynomial.var(idx.chiC[j])
+        add_obj(Monomial(0.0, {idx.chiC[j]: 1.0}), one)
     for i in range(n):
         for j in range(n):
             if i == j or prob.energy.K[i, j] <= 0 or prob.phi_e <= 0:
                 continue
             J = Posynomial.var(idx.alpha[i, j]) + \
                 Posynomial.const(prob.energy.eps_e)
-            jm = J.agm_monomial(z0)
-            # phiE * K * a / J_hat  — monomial
-            exps = {idx.alpha[i, j]: 1.0}
-            for k, p in jm.exps.items():
-                exps[k] = exps.get(k, 0.0) - p
-            obj = obj + Posynomial([Monomial(
-                float(np.log(prob.phi_e * prob.energy.K[i, j])) - jm.log_c,
-                exps)])
-    ol, oE = pack_posynomial(obj, nv)
-    return (nl, nE, dl, dE, jnp.asarray(ol), jnp.asarray(oE))
+            add_obj(Monomial(float(np.log(prob.phi_e * prob.energy.K[i, j])),
+                             {idx.alpha[i, j]: 1.0}), J)
+
+    return PackedProgram(
+        families=(pack_family(g1), pack_family(g2), pack_family(g3),
+                  pack_family(g4)),
+        o_num=_pack_terms(o_num, k),
+        o_den=_pack_terms(o_den, k))
 
 
 # ---------------------------------------------------------------- inner
-@functools.partial(jax.jit, static_argnums=(7,))
-def _inner_solve(nl, nE, dl, dE, ol, oE, z0, steps, lo, hi, rho):
-    def obj_fn(z):
-        return jnp.sum(jnp.exp(ol + oE @ z))
+def _termlog(packed, z):
+    """(G, T) log-values of every packed monomial term at z."""
+    logc, vidx, vexp = packed
+    return logc + jnp.sum(vexp * z[vidx], axis=-1)
 
-    def viol(z):
-        num = jax.nn.logsumexp(nl + jnp.einsum("gtv,v->gt", nE, z), axis=1)
-        den = jax.nn.logsumexp(dl + jnp.einsum("gtv,v->gt", dE, z), axis=1)
-        return jax.nn.relu(num - den)
 
+def _agm_log(packed, z, z0):
+    """Lemma 2 around z0, evaluated at z: log of the AGM monomial
+    prod_t (u_t / w_t)^{w_t} with w_t = softmax of term log-values at z0."""
+    t0 = _termlog(packed, z0)
+    w = jax.nn.softmax(t0, axis=-1)
+    tz = _termlog(packed, z)
+    safe = w > 1e-12
+    logw = jnp.log(jnp.where(safe, w, 1.0))
+    return jnp.sum(jnp.where(safe, w * (tz - logw), 0.0), axis=-1)
+
+
+def _objective(prog: PackedProgram, z, z0):
+    onum = jnp.squeeze(_termlog(prog.o_num, z), axis=-1)    # (Go,)
+    oden = _agm_log(prog.o_den, z, z0)
+    return jnp.sum(jnp.exp(onum - oden))
+
+
+def _violations(prog: PackedProgram, z, z0):
+    """Per-family relu(log num - log den) vectors (a list — families have
+    different group counts and term widths)."""
+    out = []
+    for fam in prog.families:
+        num = jax.nn.logsumexp(_termlog(fam.num, z), axis=-1)
+        den_agm = _agm_log(fam.den, z, z0)                  # (G,)
+        ex = _termlog(fam.ex, z)                            # (G, Te)
+        den = jax.nn.logsumexp(
+            jnp.concatenate([den_agm[:, None], ex], axis=-1), axis=-1)
+        out.append(jax.nn.relu(num - den))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("steps",))
+def _inner_solve(prog: PackedProgram, z0, steps, lo, hi, rho):
+    """Penalty + Adam minimization of the z0-linearized convex program."""
     def loss(z, r):
-        return obj_fn(z) + r * jnp.sum(jnp.square(viol(z))) \
-            + 10.0 * r * jnp.sum(viol(z))
+        vs = _violations(prog, z, z0)
+        pen = sum(r * jnp.sum(jnp.square(v)) + 10.0 * r * jnp.sum(v)
+                  for v in vs)
+        return _objective(prog, z, z0) + pen
 
     lr = 0.02
     b1, b2, eps = 0.9, 0.999, 1e-8
@@ -165,8 +254,10 @@ def _inner_solve(nl, nE, dl, dE, ol, oE, z0, steps, lo, hi, rho):
         return (z, m, v), None
 
     init = (z0, jnp.zeros_like(z0), jnp.zeros_like(z0))
-    (z, _, _), _ = jax.lax.scan(step, init, jnp.arange(float(steps)))
-    return z, obj_fn(z), jnp.max(viol(z))
+    (z, _, _), _ = jax.lax.scan(step, init, jnp.arange(steps, dtype=z0.dtype))
+    max_viol = jnp.max(jnp.stack([jnp.max(v) for v in
+                                  _violations(prog, z, z0)]))
+    return z, _objective(prog, z, z0), max_viol
 
 
 # ------------------------------------------------------------- polish
@@ -252,10 +343,36 @@ def polish_assignment(prob: STLFProblem, psi: np.ndarray,
 # ---------------------------------------------------------------- outer
 def solve_stlf(prob: STLFProblem, *, max_outer: int = 12,
                inner_steps: int = 1500, tol: float = 1e-3,
-               rho: float = 50.0, link_threshold: float = 0.02,
-               polish: bool = True, verbose: bool = False) -> SolverResult:
+               step_tol: float = 0.02, rho: float = 50.0,
+               link_threshold: float = 0.02, polish: bool = True,
+               verbose: bool = False,
+               warm_start: Optional[SolverResult] = None) -> SolverResult:
+    """Algorithm 2.
+
+    Outer convergence fires on either (a) an objective-trace plateau
+    (relative ``tol``) or (b) decision stability: the relaxed psi/alpha
+    moved less than ``step_tol`` in one outer iteration — below the 0.5
+    rounding threshold and the ``link_threshold`` there is no decision left
+    to change, only chi-auxiliary creep from the penalty ramp.
+
+    ``warm_start``: a previous SolverResult (typically for slightly
+    different problem data — drifted channels, updated divergence
+    estimates) whose relaxed iterate seeds the SCA; near-optimal seeds
+    trigger the decision-stability stop within an outer iteration or two,
+    which is what makes round-by-round re-solves in repro.sim affordable
+    (see benchmarks/sim_warmstart.py for the measured effect)."""
     n, idx = prob.n, prob.idx
-    x0 = prob.feasible_start()
+    if warm_start is not None:
+        if warm_start.x_relaxed is not None \
+                and len(warm_start.x_relaxed) == idx.nvars:
+            x0 = np.asarray(warm_start.x_relaxed, float)
+        else:
+            # different network size (churn) or externally-built result:
+            # re-derive the chi auxiliaries from (psi, alpha)
+            x0 = prob.start_from(warm_start.psi_relaxed,
+                                 warm_start.alpha_relaxed)
+    else:
+        x0 = prob.feasible_start()
     z = np.log(np.maximum(x0, 1e-12))
 
     lo = np.full(idx.nvars, np.log(1e-8))
@@ -263,21 +380,27 @@ def solve_stlf(prob: STLFProblem, *, max_outer: int = 12,
     lo[idx.psi] = np.log(prob.eps_psi); hi[idx.psi] = 0.0
     lo[idx.alpha.ravel()] = np.log(prob.eps_alpha)
     hi[idx.alpha.ravel()] = 0.0
+    z = np.clip(z, lo, hi)
+
+    prog = build_program(prob)
+    lo_j, hi_j = jnp.asarray(lo), jnp.asarray(hi)
 
     trace: List[float] = []
     converged = False
     it = 0
+    dec = np.concatenate([idx.psi, idx.alpha.ravel()])
     for it in range(max_outer):
-        packed = _build_iteration(prob, z)
         z_new, obj, max_viol = _inner_solve(
-            *packed, jnp.asarray(z), inner_steps,
-            jnp.asarray(lo), jnp.asarray(hi), rho)
+            prog, jnp.asarray(z), int(inner_steps), lo_j, hi_j, rho)
         z_new = np.asarray(z_new)
         trace.append(float(obj))
+        step = float(np.max(np.abs(np.exp(z_new[dec]) - np.exp(z[dec]))))
         if verbose:
             print(f"[stlf] outer {it}: obj={float(obj):.4f} "
-                  f"viol={float(max_viol):.2e}")
-        if it > 0 and abs(trace[-1] - trace[-2]) < tol * max(1.0, abs(trace[-2])):
+                  f"viol={float(max_viol):.2e} step={step:.4f}")
+        plateau = it > 0 and abs(trace[-1] - trace[-2]) \
+            < tol * max(1.0, abs(trace[-2]))
+        if plateau or step < step_tol:
             z = z_new
             converged = True
             break
@@ -317,4 +440,4 @@ def solve_stlf(prob: STLFProblem, *, max_outer: int = 12,
         psi=psi, alpha=alpha, psi_relaxed=psi_rel, alpha_relaxed=alpha_rel,
         objective_trace=trace,
         objective_parts=prob.objective(psi, alpha),
-        converged=converged, outer_iters=it + 1)
+        converged=converged, outer_iters=it + 1, x_relaxed=x)

@@ -4,6 +4,6 @@ from repro.data.digits import (  # noqa: F401
 )
 from repro.data.partition import (  # noqa: F401
     DeviceData, assign_label_ratios, build_network, dirichlet_label_split,
-    iterate_minibatches,
+    iterate_minibatches, make_device, reveal_labels,
 )
 from repro.data.lm_stream import LMStream, LMStreamConfig  # noqa: F401

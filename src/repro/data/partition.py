@@ -109,6 +109,54 @@ def build_network(setting: str, num_devices: int = 10,
     return devices
 
 
+def reveal_labels(dev: DeviceData, frac: float,
+                  rng: np.random.Generator) -> DeviceData:
+    """Label-arrival re-partitioning: a copy of ``dev`` with ``frac`` of
+    its currently-unlabeled samples flipped to labeled (the ground-truth
+    labels are revealed).  Devices whose labels 'arrive' this way can flip
+    from target to source on the next (P) re-solve."""
+    hidden = np.flatnonzero(~dev.labeled_mask)
+    k = int(round(frac * len(hidden)))
+    if k == 0:
+        return dev
+    mask = dev.labeled_mask.copy()
+    mask[rng.choice(hidden, size=k, replace=False)] = True
+    shown = np.where(mask, dev.true_labels, -1).astype(np.int32)
+    return DeviceData(dev.images, shown, mask, dev.domain_ids,
+                      dev.true_labels)
+
+
+def make_device(setting: str, samples_per_device: int, seed: int,
+                labeled_ratio: float,
+                label_subset: Optional[Sequence[int]] = None,
+                rng: Optional[np.random.Generator] = None) -> DeviceData:
+    """Churn re-partitioning: build ONE fresh device for the given setting
+    (a joining device in the repro.sim ``device-churn`` scenario).  Split
+    settings draw a single random domain; mixed settings mix all domains;
+    single settings use that domain."""
+    rng = rng if rng is not None else np.random.default_rng(seed)
+    if "//" in setting:
+        dom = setting.split("//")[int(rng.integers(
+            len(setting.split("//"))))]
+        ds = make_domain_dataset(dom, samples_per_device, seed, label_subset)
+    elif "+" in setting:
+        domains = setting.split("+")
+        spec = {d: samples_per_device // len(domains) for d in domains}
+        ds = make_mixture(spec, seed, label_subset)
+    else:
+        ds = make_domain_dataset(setting, samples_per_device, seed,
+                                 label_subset)
+    n = len(ds.labels)
+    mask = np.zeros(n, bool)
+    k = int(round(labeled_ratio * n))
+    if k:
+        mask[rng.permutation(n)[:k]] = True
+    shown = np.where(mask, ds.labels, -1).astype(np.int32)
+    return DeviceData(ds.images.astype(np.float32), shown, mask,
+                      ds.domain_ids.astype(np.int32),
+                      ds.labels.astype(np.int32))
+
+
 def iterate_minibatches(x: np.ndarray, y: np.ndarray, batch: int,
                         rng: np.random.Generator, iters: int):
     """Yield ``iters`` shuffled minibatches (with reshuffling epochs)."""

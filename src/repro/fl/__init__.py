@@ -2,10 +2,12 @@ from repro.fl.client import (  # noqa: F401
     StackedClients, empirical_errors, init_client_params, stack_clients,
     train_sources, true_accuracies,
 )
-from repro.fl.divergence import estimate_divergences  # noqa: F401
+from repro.fl.divergence import (  # noqa: F401
+    estimate_divergences, update_divergences,
+)
 from repro.fl.round import (  # noqa: F401
-    MethodResult, RoundState, evaluate_assignment, prepare_round,
-    run_all_baselines, run_stlf,
+    MethodResult, RoundState, evaluate_assignment, make_bounds,
+    prepare_round, run_all_baselines, run_stlf, train_local,
 )
 from repro.fl.transfer import apply_transfer, combine_models, \
     column_normalize  # noqa: F401

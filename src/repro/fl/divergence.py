@@ -90,17 +90,71 @@ def _pairwise_divergence(h0, clients: StackedClients, pair_i, pair_j, key,
 
 
 def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
-                         T: int = 25, batch: int = 10, lr: float = 0.01
-                         ) -> np.ndarray:
-    """Full Algorithm 1: returns the symmetric (N, N) matrix of empirical
-    d_H estimates (diagonal 0)."""
+                         T: int = 25, batch: int = 10, lr: float = 0.01,
+                         pairs=None, pair_chunk: int = 256) -> np.ndarray:
+    """Algorithm 1: returns the symmetric (N, N) matrix of empirical
+    d_H estimates (diagonal 0).
+
+    ``pairs``: optional (P, 2) int array of device pairs to estimate; the
+    default is every upper-triangle pair.  Restricting pairs is the
+    incremental path — when a simulator round only changed device k's
+    data, the N-1 pairs touching k are re-estimated instead of all
+    N(N-1)/2 (entries of unrequested pairs are left at 0; merge with
+    ``update_divergences``).
+
+    ``pair_chunk``: large networks vmap thousands of pair-classifiers;
+    chunking bounds the stacked-parameter working set (chunks are padded
+    to a fixed width so one compilation serves every full chunk)."""
     n = clients.n_devices
-    pi, pj = np.triu_indices(n, k=1)
+    if pairs is None:
+        pi, pj = np.triu_indices(n, k=1)
+    else:
+        pairs = np.atleast_2d(np.asarray(pairs, np.int32))
+        if pairs.size == 0:
+            return np.zeros((n, n))
+        pi, pj = np.minimum(pairs[:, 0], pairs[:, 1]), \
+            np.maximum(pairs[:, 0], pairs[:, 1])
     key, init_key = jax.random.split(key)
     h0 = cnn.cnn_init(init_key, num_classes=2)
-    d = _pairwise_divergence(h0, clients, jnp.asarray(pi), jnp.asarray(pj),
-                             key, tau=tau, T=T, batch=batch, lr=lr)
+
+    npairs = len(pi)
+    d = np.zeros(npairs)
+    if npairs <= pair_chunk:
+        d[:] = np.asarray(_pairwise_divergence(
+            h0, clients, jnp.asarray(pi), jnp.asarray(pj), key,
+            tau=tau, T=T, batch=batch, lr=lr))
+    else:
+        for c0 in range(0, npairs, pair_chunk):
+            ck = jax.random.fold_in(key, c0)
+            ci = pi[c0:c0 + pair_chunk]
+            cj = pj[c0:c0 + pair_chunk]
+            pad = pair_chunk - len(ci)
+            if pad:                      # pad w/ repeats: one compile shape
+                ci = np.concatenate([ci, np.full(pad, ci[0])])
+                cj = np.concatenate([cj, np.full(pad, cj[0])])
+            dc = np.asarray(_pairwise_divergence(
+                h0, clients, jnp.asarray(ci), jnp.asarray(cj), ck,
+                tau=tau, T=T, batch=batch, lr=lr))
+            d[c0:c0 + pair_chunk] = dc[:pair_chunk - pad] if pad \
+                else dc
     out = np.zeros((n, n))
-    out[pi, pj] = np.asarray(d)
-    out[pj, pi] = np.asarray(d)
+    out[pi, pj] = d
+    out[pj, pi] = d
+    return out
+
+
+def update_divergences(div: np.ndarray, clients: StackedClients, key,
+                       pairs, *, tau: int = 4, T: int = 25, batch: int = 10,
+                       lr: float = 0.01) -> np.ndarray:
+    """Incrementally refresh ``div`` on the given (P, 2) pairs only and
+    return the merged copy (Algorithm 1 run just for the dirty links)."""
+    pairs = np.atleast_2d(np.asarray(pairs, np.int32))
+    out = np.array(div, float, copy=True)
+    if pairs.size == 0:
+        return out
+    fresh = estimate_divergences(clients, key, tau=tau, T=T, batch=batch,
+                                 lr=lr, pairs=pairs)
+    for i, j in pairs:
+        out[i, j] = fresh[i, j]
+        out[j, i] = fresh[j, i]
     return out

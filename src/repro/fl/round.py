@@ -46,6 +46,25 @@ class MethodResult:
     solver: Optional[SolverResult] = None
 
 
+def train_local(params, clients: StackedClients, key, *,
+                iters: int = 100, batch: int = 10, lr: float = 0.01):
+    """Continue every device's local SGD — one vmapped/jit-compiled call
+    across the device axis (the per-round state-update primitive shared by
+    prepare_round and the repro.sim engine)."""
+    keys = jax.random.split(key, clients.n_devices)
+    return train_sources(params, clients, keys,
+                         iters=iters, batch=batch, lr=lr)
+
+
+def make_bounds(clients: StackedClients, eps: np.ndarray, div: np.ndarray,
+                delta: float = 0.05) -> BoundTerms:
+    """BoundTerms from the current measurements of a (possibly updated)
+    network — the (P)-input refresh the simulator runs every round."""
+    return BoundTerms(eps_hat=np.asarray(eps),
+                      n_data=np.asarray(clients.counts),
+                      div_hat=np.asarray(div), delta=delta)
+
+
 def prepare_round(devices: List[DeviceData], key, *,
                   train_iters: int = 100, train_batch: int = 10,
                   train_lr: float = 0.01, div_tau: int = 4, div_T: int = 25,
@@ -55,16 +74,14 @@ def prepare_round(devices: List[DeviceData], key, *,
     n = clients.n_devices
     k_init, k_train, k_div = jax.random.split(key, 3)
     params = init_client_params(n, k_init)
-    params = train_sources(params, clients, jax.random.split(k_train, n),
-                           iters=train_iters, batch=train_batch, lr=train_lr)
+    params = train_local(params, clients, k_train, iters=train_iters,
+                         batch=train_batch, lr=train_lr)
     eps = np.asarray(empirical_errors(params, clients))
     div = estimate_divergences(clients, k_div, tau=div_tau, T=div_T,
                                batch=train_batch, lr=train_lr)
     if energy is None:
         energy = EnergyModel.sample(n, np.random.default_rng(energy_seed))
-    bounds = BoundTerms(eps_hat=eps,
-                        n_data=np.asarray(clients.counts),
-                        div_hat=div, delta=delta)
+    bounds = make_bounds(clients, eps, div, delta)
     return RoundState(clients, params, eps, div, energy, bounds)
 
 
@@ -72,7 +89,8 @@ def evaluate_assignment(state: RoundState, name: str, psi: np.ndarray,
                         alpha: np.ndarray,
                         solver: Optional[SolverResult] = None
                         ) -> MethodResult:
-    alpha = column_normalize(alpha, psi)
+    alpha = column_normalize(alpha, psi, energy_K=state.energy.K,
+                             eps_hat=state.eps_hat)
     mixed = apply_transfer(state.params, jnp.asarray(alpha),
                            jnp.asarray(psi))
     acc = np.asarray(true_accuracies(mixed, state.clients))

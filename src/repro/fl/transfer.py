@@ -41,9 +41,20 @@ def apply_transfer(params_stack, alpha, psi):
     return jax.tree_util.tree_map(sel, params_stack, mixed)
 
 
-def column_normalize(alpha: np.ndarray, psi: np.ndarray) -> np.ndarray:
+def column_normalize(alpha: np.ndarray, psi: np.ndarray,
+                     energy_K: np.ndarray = None,
+                     eps_hat: np.ndarray = None) -> np.ndarray:
     """Project raw link weights onto (P)'s feasible set: zero rows for
-    targets / columns for sources, unit column sums at targets."""
+    targets / columns for sources, unit column sums at targets.
+
+    A target whose column sums to ~0 (every candidate link deactivated)
+    still must receive unit weight — constraints (75)+(76) squeeze
+    |sum_i alpha_ij - psi_j| <= eps_C.  The rescue source is chosen by the
+    cheapest criterion available rather than arbitrarily: minimum link
+    energy ``energy_K[:, j]`` when given, else the lowest-error source
+    (``eps_hat``), else the first source (the historical tie-break, kept
+    as the final fallback so callers without measurements stay valid).
+    """
     a = np.array(alpha, float)
     a[psi == 1.0, :] = 0.0
     a[:, psi == 0.0] = 0.0
@@ -54,6 +65,13 @@ def column_normalize(alpha: np.ndarray, psi: np.ndarray) -> np.ndarray:
             a[:, j] /= c
         else:
             srcs = np.flatnonzero(psi == 0.0)
-            if len(srcs):
-                a[srcs[0], j] = 1.0
+            if len(srcs) == 0:
+                continue
+            if energy_K is not None:
+                pick = srcs[int(np.argmin(np.asarray(energy_K)[srcs, j]))]
+            elif eps_hat is not None:
+                pick = srcs[int(np.argmin(np.asarray(eps_hat)[srcs]))]
+            else:
+                pick = srcs[0]
+            a[pick, j] = 1.0
     return a

@@ -17,7 +17,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.compat import TPUCompilerParams
 
 
 def _combine_kernel(alpha_ref, theta_ref, out_ref):
@@ -46,7 +48,7 @@ def alpha_combine_flat(theta, alpha, *, block_p: int = 2048,
         ],
         out_specs=pl.BlockSpec((t, bp), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((t, pp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(alpha, th)

@@ -1,0 +1,12 @@
+"""Cross-version Pallas-TPU compat aliases.
+
+``jax.experimental.pallas.tpu`` renamed ``TPUCompilerParams`` to
+``CompilerParams`` (and back) across releases; the kernels only need the
+dimension-semantics field, so resolve whichever name this JAX ships.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+TPUCompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

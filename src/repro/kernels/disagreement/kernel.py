@@ -13,7 +13,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels.compat import TPUCompilerParams
 
 
 def _disagree_kernel(pi_ref, pj_ref, vm_ref, out_ref, acc_ref):
@@ -60,7 +62,7 @@ def disagreement_counts(preds, valid, *, block_n: int = 128,
         out_specs=pl.BlockSpec((bn, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((np_, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(p, p, v)

@@ -1,0 +1,17 @@
+"""repro.sim — time-evolving decentralized-network simulator.
+
+The paper evaluates ST-LF as a one-shot optimization; this subsystem runs
+it as a SYSTEM: a network of devices advances round by round under a named
+scenario (channel drift, device churn, label arrival), local training
+continues in one batched call per round, divergence estimates refresh
+incrementally, and the (P) solver re-runs — warm-started from the previous
+solution — only when the measured drift exceeds a threshold.
+
+Entry points:
+  python -m repro.sim.run --scenario channel-drift --devices 64 --rounds 20
+  SimulationEngine(SimConfig(...)).run()
+"""
+from repro.sim.engine import SimConfig, SimulationEngine  # noqa: F401
+from repro.sim.metrics import MetricsLogger, read_jsonl  # noqa: F401
+from repro.sim.scenarios import SCENARIOS, get_scenario  # noqa: F401
+from repro.sim.state import NetworkState  # noqa: F401

@@ -1,0 +1,281 @@
+"""Simulation engine: advances a NetworkState round by round.
+
+Round pipeline (one `step()`):
+  1. scenario mutation (drift / churn / label arrival) -> events
+  2. batched local training + measurement refresh: ONE compiled call for
+     the whole device axis (repro.sim.training.network_step)
+  3. incremental divergence refresh: only never-estimated active pairs run
+     Algorithm 1 (device data is immutable except for label reveals, which
+     do not move the feature distribution)
+  4. drift-gated (P) re-solve: solve_stlf runs only when the measured
+     drift vs the last-solve snapshot exceeds ``resolve_threshold`` or
+     membership changed; re-solves are warm-started from the previous
+     SolverResult (remapped over churn)
+  5. transfer + evaluation + JSONL metrics
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bounds import BoundTerms
+from repro.core.energy import EnergyModel
+from repro.core.problem import STLFProblem
+from repro.core.solver import SolverResult, solve_stlf
+from repro.data.partition import build_network, make_device, reveal_labels
+from repro.fl.client import init_client_params, stack_clients
+from repro.fl.divergence import update_divergences
+from repro.fl.transfer import apply_transfer, column_normalize
+from repro.sim.metrics import MetricsLogger, RoundRecord
+from repro.sim.scenarios import get_scenario
+from repro.sim.state import NetworkState
+from repro.sim.training import mixed_accuracies, network_step
+
+LINK_THRESH = 1e-3
+
+
+@dataclasses.dataclass
+class SimConfig:
+    scenario: str = "static"
+    devices: int = 8
+    rounds: int = 5
+    seed: int = 0
+    setting: str = "M//MM"
+    samples_per_device: int = 100
+    spares: int = -1             # -1: let the scenario choose
+    # per-round local training
+    train_iters: int = 30
+    batch: int = 10
+    lr: float = 0.01
+    # Algorithm-1 settings (sim-scale: cheaper than one-shot reproduction)
+    div_tau: int = 1
+    div_T: int = 8
+    # objective weights + solver
+    phi_s: float = 1.0
+    phi_t: float = 5.0
+    phi_e: float = 1.0
+    solver_max_outer: int = 8
+    solver_inner_steps: int = 600
+    resolve_threshold: float = 0.05
+    # scenario knobs (read by scenarios.py via getattr)
+    drift_sigma: float = 0.15
+    churn_p_leave: float = 0.35
+    churn_p_join: float = 0.35
+    label_frac: float = 0.25
+    label_p_device: float = 0.5
+    log_path: Optional[str] = None
+    verbose: bool = False
+
+
+class SimulationEngine:
+    def __init__(self, cfg: SimConfig):
+        self.cfg = cfg
+        scen_cls = get_scenario(cfg.scenario)
+        self.rng = np.random.default_rng(cfg.seed)
+        self.scenario = scen_cls(cfg, np.random.default_rng(cfg.seed + 1))
+        self.key = jax.random.PRNGKey(cfg.seed)
+
+        spares = cfg.spares if cfg.spares >= 0 else scen_cls.wants_spares
+        pool = build_network(cfg.setting, num_devices=cfg.devices,
+                             samples_per_device=cfg.samples_per_device,
+                             seed=cfg.seed)
+        for k in range(spares):
+            ratio = 0.0 if self.rng.random() < 0.5 \
+                else float(self.rng.uniform(0.3, 0.9))
+            pool.append(make_device(cfg.setting, cfg.samples_per_device,
+                                    cfg.seed + 9000 + k, ratio,
+                                    rng=self.rng))
+        p = len(pool)
+        active = np.zeros(p, bool)
+        active[:cfg.devices] = True
+
+        k_init, self.key = jax.random.split(self.key)
+        self.state = NetworkState(
+            round=0, pool=pool, active=active,
+            clients=stack_clients(pool),
+            params=init_client_params(p, k_init),
+            eps_hat=np.ones(p), own_acc=np.zeros(p),
+            div_hat=np.zeros((p, p)), div_known=np.eye(p, dtype=bool),
+            energy=EnergyModel.sample(p, np.random.default_rng(cfg.seed)),
+            psi=np.zeros(p), alpha=np.zeros((p, p)))
+        self.logger = MetricsLogger(cfg.log_path)
+        self._restack = False
+        self._membership_dirty = False
+        self._prev_links: set = set()
+        self._energy_cum = 0.0
+
+    # ------------------------------------------------- scenario mutation API
+    def drift_channels(self, rng: np.random.Generator, sigma: float):
+        self.state.energy = self.state.energy.drift(rng, sigma)
+
+    def set_active(self, device: int, flag: bool):
+        self.state.active[device] = flag
+        self._membership_dirty = True
+
+    def reveal_labels(self, device: int, frac: float,
+                      rng: np.random.Generator):
+        self.state.pool[device] = reveal_labels(self.state.pool[device],
+                                                frac, rng)
+        self._restack = True
+
+    # ------------------------------------------------------------ internals
+    def _drift_metric(self) -> float:
+        st = self.state
+        if st.solver is None or st.ref_K is None:
+            return float("inf")
+        a = st.active_idx
+        sub = np.ix_(a, a)
+        off = ~np.eye(len(a), dtype=bool)
+        ref_k, cur_k = st.ref_K[sub][off], st.energy.K[sub][off]
+        dk = float(np.abs(cur_k - ref_k).mean()
+                   / max(float(ref_k.mean()), 1e-12))
+        de = float(np.abs(st.eps_hat[a] - st.ref_eps[a]).mean())
+        dd = float(np.abs(st.div_hat[sub] - st.ref_div[sub]).mean())
+        return dk + de + dd
+
+    def _warm_for(self, a: np.ndarray) -> Optional[SolverResult]:
+        """Previous solve, remapped onto the current active set."""
+        st = self.state
+        if st.solver is None:
+            return None
+        if np.array_equal(a, st.solve_active):
+            return st.solver
+        n = len(a)
+        pos = {int(d): k for k, d in enumerate(st.solve_active)}
+        psi0 = np.full(n, 0.5)                  # new joiners: undecided
+        alpha0 = np.full((n, n), 1e-3)
+        np.fill_diagonal(alpha0, 0.0)
+        for x, dx in enumerate(a):
+            if int(dx) in pos:
+                psi0[x] = st.solver.psi_relaxed[pos[int(dx)]]
+                for y, dy in enumerate(a):
+                    if int(dy) in pos:
+                        alpha0[x, y] = st.solver.alpha_relaxed[
+                            pos[int(dx)], pos[int(dy)]]
+        return SolverResult(
+            psi=(psi0 >= 0.5).astype(float), alpha=alpha0,
+            psi_relaxed=psi0, alpha_relaxed=alpha0, objective_trace=[],
+            objective_parts={}, converged=False, outer_iters=0,
+            x_relaxed=None)
+
+    def _solve(self, a: np.ndarray) -> SolverResult:
+        st, cfg = self.state, self.cfg
+        sub = np.ix_(a, a)
+        counts = np.asarray(st.clients.counts)
+        bounds = BoundTerms(eps_hat=st.eps_hat[a], n_data=counts[a],
+                            div_hat=st.div_hat[sub])
+        prob = STLFProblem(bounds,
+                           EnergyModel(K=st.energy.K[sub],
+                                       eps_e=st.energy.eps_e),
+                           phi_s=cfg.phi_s, phi_t=cfg.phi_t,
+                           phi_e=cfg.phi_e)
+        return solve_stlf(prob, max_outer=cfg.solver_max_outer,
+                          inner_steps=cfg.solver_inner_steps,
+                          warm_start=self._warm_for(a),
+                          verbose=cfg.verbose)
+
+    # ---------------------------------------------------------------- round
+    def step(self, t: int) -> dict:
+        st, cfg = self.state, self.cfg
+        t0 = time.time()
+        events = self.scenario.step(self, t)
+        if self._restack:
+            st.clients = stack_clients(st.pool)
+            self._restack = False
+
+        # 2. batched train + measure (one compiled call over the pool)
+        k_round = jax.random.fold_in(self.key, t)
+        st.params, eps, acc = network_step(
+            st.params, st.clients, k_round, jnp.asarray(st.active),
+            iters=cfg.train_iters, batch=cfg.batch, lr=cfg.lr)
+        st.eps_hat = np.asarray(eps, float)
+        st.own_acc = np.asarray(acc, float)
+
+        # 3. incremental divergence refresh
+        pairs = st.unknown_active_pairs()
+        if len(pairs):
+            k_div = jax.random.fold_in(k_round, 1)
+            st.div_hat = update_divergences(
+                st.div_hat, st.clients, k_div, pairs, tau=cfg.div_tau,
+                T=cfg.div_T, batch=cfg.batch, lr=cfg.lr)
+            for i, j in pairs:
+                st.div_known[i, j] = st.div_known[j, i] = True
+
+        # 4. drift-gated warm re-solve
+        a = st.active_idx
+        drift = self._drift_metric()
+        membership_changed = self._membership_dirty or st.solver is None \
+            or not np.array_equal(a, st.solve_active)
+        resolved = membership_changed or drift > cfg.resolve_threshold
+        warm = False
+        solver_iters = 0
+        if resolved:
+            warm = st.solver is not None
+            res = self._solve(a)
+            solver_iters = res.outer_iters
+            st.solver = res
+            st.solve_active = a.copy()
+            st.ref_K = st.energy.K.copy()
+            st.ref_eps = st.eps_hat.copy()
+            st.ref_div = st.div_hat.copy()
+            st.psi = np.zeros(st.pool_size)
+            st.alpha = np.zeros((st.pool_size, st.pool_size))
+            st.psi[a] = res.psi
+            st.alpha[np.ix_(a, a)] = column_normalize(
+                res.alpha, res.psi, energy_K=st.energy.K[np.ix_(a, a)],
+                eps_hat=st.eps_hat[a])
+            self._membership_dirty = False
+
+        # 5. transfer + evaluation
+        mixed = apply_transfer(st.params, jnp.asarray(st.alpha),
+                               jnp.asarray(st.psi))
+        st.params = mixed                        # targets adopt mixtures
+        acc_mixed = np.asarray(mixed_accuracies(mixed, st.clients), float)
+
+        src = a[st.psi[a] == 0.0]
+        tgt = a[st.psi[a] == 1.0]
+        links = {(int(i), int(j)) for i, j in zip(
+            *np.nonzero(st.alpha > LINK_THRESH))}
+        union = links | self._prev_links
+        churn = len(links ^ self._prev_links) / max(len(union), 1)
+        self._prev_links = links
+        round_energy = st.energy.energy(st.alpha)
+        self._energy_cum += round_energy
+
+        record = RoundRecord(
+            round=t, scenario=cfg.scenario, n_active=len(a),
+            n_sources=len(src), n_targets=len(tgt),
+            resolved=bool(resolved), warm=bool(warm),
+            solver_iters=int(solver_iters),
+            drift=float(drift if np.isfinite(drift) else -1.0),
+            mean_target_acc=float(acc_mixed[tgt].mean()) if len(tgt)
+            else float("nan"),
+            mean_source_acc=float(acc_mixed[src].mean()) if len(src)
+            else float("nan"),
+            energy=float(round_energy),
+            energy_cum=float(self._energy_cum),
+            transmissions=st.energy.transmissions(st.alpha),
+            link_churn=float(churn), events=events,
+            wall_time_s=time.time() - t0)
+        row = self.logger.log(record)
+        if cfg.verbose:
+            print(f"[sim] round {t}: active={len(a)} "
+                  f"src={len(src)} tgt={len(tgt)} "
+                  f"resolve={resolved} ({solver_iters} it, warm={warm}) "
+                  f"tgt_acc={record.mean_target_acc:.3f} "
+                  f"energy={record.energy:.3f}")
+        st.round = t + 1
+        return row
+
+    def run(self) -> List[dict]:
+        try:
+            for t in range(self.cfg.rounds):
+                self.step(t)
+        finally:
+            self.logger.close()
+        return self.logger.records

@@ -1,0 +1,93 @@
+"""Per-round event/metrics log for the simulator (JSONL).
+
+Schema (one JSON object per line, one line per round):
+  round            int    0-based round index
+  scenario         str    scenario name
+  n_active         int    devices currently in the network
+  n_sources        int    active devices with psi == 0
+  n_targets        int    active devices with psi == 1
+  resolved         bool   whether solve_stlf ran this round
+  warm             bool   whether that solve was warm-started
+  solver_iters     int    outer SCA iterations of that solve (0 if skipped)
+  drift            float  drift metric vs. the last-solve snapshot
+                          (-1.0 on rounds before any snapshot exists)
+  mean_target_acc  float  ground-truth accuracy at targets (post-transfer)
+  mean_source_acc  float  ground-truth accuracy at sources
+  energy           float  network energy of this round's alpha (eq. 14)
+  energy_cum       float  running total energy spent
+  transmissions    int    active links
+  link_churn       float  |L_t symdiff L_{t-1}| / |L_t union L_{t-1}|
+  events           list   scenario events applied this round
+  wall_time_s      float  wall-clock seconds for the round (excluded from
+                          determinism comparisons)
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import IO, List, Optional
+
+# wall-clock / environment-dependent fields, excluded when comparing runs
+NONDETERMINISTIC_FIELDS = ("wall_time_s",)
+
+
+@dataclasses.dataclass
+class RoundRecord:
+    round: int
+    scenario: str
+    n_active: int
+    n_sources: int
+    n_targets: int
+    resolved: bool
+    warm: bool
+    solver_iters: int
+    drift: float
+    mean_target_acc: float
+    mean_source_acc: float
+    energy: float
+    energy_cum: float
+    transmissions: int
+    link_churn: float
+    events: List[dict]
+    wall_time_s: float
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class MetricsLogger:
+    """Appends one JSON line per round; ``path=None`` collects in memory
+    only (both modes keep ``records`` for programmatic access)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self.records: List[dict] = []
+        self._fh: Optional[IO[str]] = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "w")
+
+    def log(self, record: RoundRecord) -> dict:
+        row = record.to_dict()
+        self.records.append(row)
+        if self._fh:
+            self._fh.write(json.dumps(row, default=float) + "\n")
+            self._fh.flush()
+        return row
+
+    def close(self):
+        if self._fh:
+            self._fh.close()
+            self._fh = None
+
+
+def read_jsonl(path: str) -> List[dict]:
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def strip_nondeterministic(rows: List[dict]) -> List[dict]:
+    """Rows minus wall-clock fields — the determinism-comparison view."""
+    return [{k: v for k, v in r.items() if k not in NONDETERMINISTIC_FIELDS}
+            for r in rows]

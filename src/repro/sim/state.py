@@ -1,0 +1,57 @@
+"""NetworkState: everything the simulator tracks about the device pool.
+
+The pool is FIXED-SIZE (initial devices + spare slots for churn joins) so
+every jitted computation keeps a static shape; membership changes flip the
+``active`` mask instead of reshaping arrays.  Inactive devices keep their
+parameters (psi is forced to 0 / alpha rows+cols to 0 for them, so
+apply_transfer leaves them untouched while they are away).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.energy import EnergyModel
+from repro.core.solver import SolverResult
+from repro.data.partition import DeviceData
+from repro.fl.client import StackedClients
+
+
+@dataclasses.dataclass
+class NetworkState:
+    round: int
+    pool: List[DeviceData]          # size P (devices + spares)
+    active: np.ndarray              # (P,) bool
+    clients: StackedClients         # stacked FULL pool
+    params: object                  # stacked per-device params, pool-major
+    eps_hat: np.ndarray             # (P,)
+    own_acc: np.ndarray             # (P,) accuracy of own params
+    div_hat: np.ndarray             # (P, P) Algorithm-1 estimates
+    div_known: np.ndarray           # (P, P) bool: pair ever estimated
+    energy: EnergyModel             # K is (P, P)
+    # current assignment, embedded at pool indices (inactive: psi=0, alpha=0)
+    psi: np.ndarray                 # (P,)
+    alpha: np.ndarray               # (P, P)
+    solver: Optional[SolverResult] = None
+    solve_active: Optional[np.ndarray] = None   # active idx at last solve
+    # measurement snapshot at the last solve (drift reference)
+    ref_K: Optional[np.ndarray] = None
+    ref_eps: Optional[np.ndarray] = None
+    ref_div: Optional[np.ndarray] = None
+
+    @property
+    def pool_size(self) -> int:
+        return len(self.pool)
+
+    @property
+    def active_idx(self) -> np.ndarray:
+        return np.flatnonzero(self.active)
+
+    def unknown_active_pairs(self) -> np.ndarray:
+        """(M, 2) active pairs whose divergence was never estimated."""
+        a = self.active_idx
+        out = [(i, j) for ii, i in enumerate(a) for j in a[ii + 1:]
+               if not self.div_known[i, j]]
+        return np.asarray(out, np.int32).reshape(-1, 2)

@@ -1,0 +1,61 @@
+"""Batched per-round client training: the whole device axis in ONE
+compiled call.
+
+Reuses the StackedClients layout and the vmapped SGD of repro.fl.client;
+the fusion here is that local training, the empirical-error refresh and
+the ground-truth accuracy sweep all run inside a single jit so a 64+
+device network advances one round without returning to Python in between.
+
+Unlike the one-shot prepare_round (where untrained unlabeled devices are
+simply overwritten by the transfer), the simulator CONTINUES from mixed
+parameters round after round — so devices with no labeled data must keep
+their received parameters instead of drifting under the dummy y=0 SGD that
+train_sources runs for them; ``network_step`` masks their update out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.fl.client import (StackedClients, empirical_errors,
+                             train_sources, true_accuracies)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "batch", "lr"))
+def network_step(params, clients: StackedClients, key, active, *,
+                 iters: int, batch: int, lr: float):
+    """One simulator round of local training for every device at once.
+
+    ``active``: (N,) bool — devices currently in the network.  Departed
+    devices must NOT keep training while away: their params stay frozen
+    until they rejoin.  (The SGD itself still runs for every pool slot —
+    shapes stay static across churn — only its result is discarded.)
+
+    Returns (params', eps_hat, own_acc):
+      params'  — updated stacked params; inactive devices and devices
+                 without labeled data are left untouched
+      eps_hat  — empirical errors (unlabeled counted as 1), shape (N,)
+      own_acc  — ground-truth accuracy of each device's own params, (N,)
+    """
+    keys = jax.random.split(key, clients.n_devices)
+    trained = train_sources(params, clients, keys,
+                            iters=iters, batch=batch, lr=lr)
+    update = jnp.logical_and(jnp.any(clients.labeled, axis=1),
+                             jnp.asarray(active))           # (N,)
+
+    def keep(new, old):
+        m = update.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    params = jax.tree_util.tree_map(keep, trained, params)
+    eps = empirical_errors(params, clients)
+    acc = true_accuracies(params, clients)
+    return params, eps, acc
+
+
+@jax.jit
+def mixed_accuracies(params, clients: StackedClients):
+    """Ground-truth accuracy of (post-transfer) stacked params."""
+    return true_accuracies(params, clients)

@@ -1,7 +1,7 @@
 """Synthetic domains + federated partitioning."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data import (DOMAINS, NUM_CLASSES, build_network,
                         dirichlet_label_split, make_domain_dataset,

@@ -1,7 +1,7 @@
 """Communication-energy model (eq. 14 + Sec. V determination)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.energy import EnergyModel, dbm_to_watts
 

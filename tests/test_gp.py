@@ -1,6 +1,6 @@
 """GP machinery: the AGM monomial bound (Lemma 2) as a property test."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.gp import Monomial, Posynomial, pack_monomial, \
     pack_posynomial
