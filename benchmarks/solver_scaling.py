@@ -1,0 +1,188 @@
+"""Solver scaling: program packing + cold/warm re-solve wall-clock vs N.
+
+Measures, at each network size:
+  pack_ref_s   object-graph (gp.Posynomial) packing — build_program_reference
+  pack_vec_s   vectorized index-arithmetic packing — build_program
+  pack_struct_s  structured-form packing — build_structured (the solve path)
+  cold_s       cold solve_stlf at simulator settings (includes jit compile)
+  warm_s       steady-state warm re-solve on drifted channels (the
+               trajectory repro.sim follows: warm_start = previous warm
+               result, solver_inner_steps_warm budget); warm_first_s
+               carries the one-off compile of the warm step shape
+Writes results/bench/solver_scaling.json plus a repo-root
+BENCH_solver.json summary (pack speedup at N=64, warm re-solve seconds at
+N=256 — the perf-trajectory numbers ROADMAP tracks).
+
+Run:  PYTHONPATH=src python -m benchmarks.solver_scaling [--quick|--full]
+CI:   PYTHONPATH=src python -m benchmarks.solver_scaling --ci
+      (N=32 packing parity + speed smoke; exits nonzero on regression)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+try:
+    from benchmarks.common import save_rows, timed
+except ModuleNotFoundError:          # invoked as a script, not a module
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks.common import save_rows, timed
+from repro.core.bounds import BoundTerms
+from repro.core.energy import EnergyModel
+from repro.core.problem import STLFProblem
+from repro.core.solver import (build_program, build_program_reference,
+                               build_structured, solve_stlf)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SIZES_FULL = [16, 32, 64, 128, 256]
+SIZES_QUICK = [16, 32]
+REF_PACK_MAX = 64            # object-graph packer beyond this adds minutes
+# simulator-settings solve (SimConfig defaults)
+SOLVE_KW = dict(max_outer=8, inner_steps=600, inner_tol=1e-4)
+WARM_KW = dict(max_outer=8, inner_steps=150, inner_tol=1e-4)
+
+
+def random_problem(n: int, rng: np.random.Generator,
+                   energy: EnergyModel) -> STLFProblem:
+    eps = rng.uniform(0.05, 1.0, n)
+    div = rng.uniform(0.1, 1.5, (n, n))
+    div = 0.5 * (div + div.T)
+    np.fill_diagonal(div, 0.0)
+    bounds = BoundTerms(eps_hat=eps, n_data=np.full(n, 5000), div_hat=div)
+    return STLFProblem(bounds, energy)
+
+
+def _block(prog):
+    for leaf in jax.tree_util.tree_leaves(prog):
+        leaf.block_until_ready()
+    return prog
+
+
+def timed_pack(fn, prob, reps: int = 3) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        _block(fn(prob))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_size(n: int, *, ref_pack: bool, drift_steps: int = 2,
+               sigma: float = 0.1, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    energy = EnergyModel.sample(n, rng)
+    prob = random_problem(n, rng, energy)
+
+    pack_vec = timed_pack(build_program, prob)
+    pack_struct = timed_pack(build_structured, prob)
+    pack_ref = timed_pack(build_program_reference, prob, reps=1) \
+        if ref_pack else None
+
+    cold, cold_s = timed(solve_stlf, prob, **SOLVE_KW)
+
+    # warm trajectory: drift the channel, re-solve from the previous WARM
+    # result — exactly what repro.sim's drift-gated rounds do.  The first
+    # warm step pays the inner-solve compile for the warm step budget;
+    # steady state is every later round.
+    warm_times, prev = [], cold
+    for _ in range(max(drift_steps, 2)):
+        energy = energy.drift(rng, sigma)
+        drifted = STLFProblem(prob.bounds, energy)
+        prev, tw = timed(solve_stlf, drifted, warm_start=prev, **WARM_KW)
+        warm_times.append(tw)
+    row = dict(
+        n=n, pack_ref_s=pack_ref, pack_vec_s=pack_vec,
+        pack_struct_s=pack_struct,
+        pack_speedup=(pack_ref / pack_vec) if pack_ref else None,
+        cold_s=cold_s, cold_iters=cold.outer_iters,
+        warm_first_s=warm_times[0],
+        warm_s=float(np.mean(warm_times[1:])),
+        warm_iters=prev.outer_iters,
+        warm_pack_s=prev.pack_time_s,
+        psi_sources=int(np.sum(prev.psi == 0.0)))
+    speed_txt = f"{pack_ref:7.3f}s ({row['pack_speedup']:.0f}x ref)" \
+        if pack_ref else "(ref skipped)"
+    print(f"[solver_scaling] N={n:4d}: pack vec {pack_vec * 1e3:7.2f}ms "
+          f"ref {speed_txt}")
+    print(f"                 cold {cold_s:6.1f}s ({cold.outer_iters} it)  "
+          f"warm {row['warm_s']:5.2f}s steady "
+          f"({warm_times[0]:.2f}s first, {prev.outer_iters} it)")
+    return row
+
+
+def write_summary(rows):
+    by_n = {r["n"]: r for r in rows}
+    summary = {
+        "benchmark": "benchmarks/solver_scaling.py",
+        "host": "2-core reference box (see ROADMAP)",
+        "solve_settings": {"cold": SOLVE_KW, "warm": WARM_KW},
+        "pack_speedup_n64": (by_n.get(64) or {}).get("pack_speedup"),
+        "pack_vec_ms_n64": (by_n[64]["pack_vec_s"] * 1e3
+                            if 64 in by_n else None),
+        "warm_resolve_s_n256": (by_n.get(256) or {}).get("warm_s"),
+        "cold_solve_s_n256": (by_n.get(256) or {}).get("cold_s"),
+        "rows": rows,
+    }
+    path = os.path.join(REPO_ROOT, "BENCH_solver.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, default=float)
+    print(f"[solver_scaling] summary -> {path}")
+    return summary
+
+
+def main(quick: bool = True, *, seed: int = 0):
+    sizes = SIZES_QUICK if quick else SIZES_FULL
+    rows = [bench_size(n, ref_pack=n <= REF_PACK_MAX, seed=seed)
+            for n in sizes]
+    if not quick:            # quick runs must not clobber the committed
+        write_summary(rows)  # full-run BENCH_solver.json summary
+    return rows
+
+
+def ci_smoke(n: int = 32, min_speedup: float = 3.0) -> int:
+    """Fast packing regression gate: parity + speed at N<=32.
+
+    The speed bar is deliberately loose (measured margin ~14x at N=32;
+    the gate fires at <3x) so CPU contention on the 2-core box cannot
+    flake the build — only a real return of per-term Python packing
+    trips it."""
+    rng = np.random.default_rng(0)
+    prob = random_problem(n, rng, EnergyModel.sample(n, rng))
+    vec = build_program(prob)
+    ref = build_program_reference(prob)
+    flat_v, _ = jax.tree_util.tree_flatten(vec)
+    flat_r, _ = jax.tree_util.tree_flatten(ref)
+    for i, (a, b) in enumerate(zip(flat_v, flat_r)):
+        if a.shape != b.shape or not np.array_equal(np.asarray(a),
+                                                    np.asarray(b)):
+            print(f"[solver_scaling --ci] FAIL: packed leaf {i} mismatch")
+            return 1
+    tv = timed_pack(build_program, prob, reps=5)
+    tr = timed_pack(build_program_reference, prob, reps=1)
+    speedup = tr / tv
+    print(f"[solver_scaling --ci] N={n}: parity OK, "
+          f"pack {tr:.3f}s -> {tv * 1e3:.1f}ms ({speedup:.0f}x)")
+    if speedup < min_speedup:
+        print(f"[solver_scaling --ci] FAIL: speedup {speedup:.1f}x "
+              f"< {min_speedup}x — vectorized packer regressed")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--quick", action="store_true")
+    p.add_argument("--full", action="store_true")
+    p.add_argument("--ci", action="store_true")
+    p.add_argument("--seed", type=int, default=0)
+    a = p.parse_args()
+    if a.ci:
+        raise SystemExit(ci_smoke())
+    save_rows("solver_scaling", main(quick=not a.full, seed=a.seed))

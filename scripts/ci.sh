@@ -9,6 +9,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 
+# packing-regression gate: vectorized packer parity + speed at N=32
+python -m benchmarks.solver_scaling --ci
+
 python -m repro.sim.run --scenario channel-drift --devices 8 --rounds 2 \
     --samples 40 --train-iters 10 --quiet \
     --out "${REPRO_SIM_LOG:-results/sim/ci_smoke.jsonl}"

@@ -154,7 +154,7 @@ def update_divergences(div: np.ndarray, clients: StackedClients, key,
         return out
     fresh = estimate_divergences(clients, key, tau=tau, T=T, batch=batch,
                                  lr=lr, pairs=pairs)
-    for i, j in pairs:
-        out[i, j] = fresh[i, j]
-        out[j, i] = fresh[j, i]
+    pi, pj = pairs[:, 0], pairs[:, 1]        # vectorized symmetric scatter
+    out[pi, pj] = fresh[pi, pj]
+    out[pj, pi] = fresh[pj, pi]
     return out

@@ -61,6 +61,14 @@ class SimConfig:
     phi_e: float = 1.0
     solver_max_outer: int = 8
     solver_inner_steps: int = 600
+    # Warm-started re-solves seed near the optimum, so each linearized
+    # inner problem needs a fraction of the cold budget (the penalty ramp
+    # is schedule-preserving: it scales with the step count).  Measured at
+    # N=256: identical decisions at 4x fewer steps (benchmarks/
+    # solver_scaling.py).
+    solver_inner_steps_warm: int = 150
+    # inner-loop early-stop safety valve (see solve_stlf inner_tol)
+    solver_inner_tol: float = 1e-4
     resolve_threshold: float = 0.05
     # scenario knobs (read by scenarios.py via getattr)
     drift_sigma: float = 0.15
@@ -139,24 +147,27 @@ class SimulationEngine:
         return dk + de + dd
 
     def _warm_for(self, a: np.ndarray) -> Optional[SolverResult]:
-        """Previous solve, remapped onto the current active set."""
+        """Previous solve, remapped onto the current active set (numpy
+        fancy indexing over the churn — both index sets are sorted, so
+        surviving devices are located with one searchsorted)."""
         st = self.state
         if st.solver is None:
             return None
         if np.array_equal(a, st.solve_active):
             return st.solver
         n = len(a)
-        pos = {int(d): k for k, d in enumerate(st.solve_active)}
         psi0 = np.full(n, 0.5)                  # new joiners: undecided
         alpha0 = np.full((n, n), 1e-3)
         np.fill_diagonal(alpha0, 0.0)
-        for x, dx in enumerate(a):
-            if int(dx) in pos:
-                psi0[x] = st.solver.psi_relaxed[pos[int(dx)]]
-                for y, dy in enumerate(a):
-                    if int(dy) in pos:
-                        alpha0[x, y] = st.solver.alpha_relaxed[
-                            pos[int(dx)], pos[int(dy)]]
+        sa = np.asarray(st.solve_active)
+        if len(sa):
+            loc = np.minimum(np.searchsorted(sa, a), len(sa) - 1)
+            kept = sa[loc] == a                 # device also in last solve
+            new_pos = np.flatnonzero(kept)
+            old_pos = loc[kept]
+            psi0[new_pos] = st.solver.psi_relaxed[old_pos]
+            alpha0[np.ix_(new_pos, new_pos)] = \
+                st.solver.alpha_relaxed[np.ix_(old_pos, old_pos)]
         return SolverResult(
             psi=(psi0 >= 0.5).astype(float), alpha=alpha0,
             psi_relaxed=psi0, alpha_relaxed=alpha0, objective_trace=[],
@@ -174,10 +185,19 @@ class SimulationEngine:
                                        eps_e=st.energy.eps_e),
                            phi_s=cfg.phi_s, phi_t=cfg.phi_t,
                            phi_e=cfg.phi_e)
+        warm = self._warm_for(a)
+        # The reduced warm budget is earned only by a true continuation
+        # seed (same membership, drifted data).  Churn re-solves are
+        # warm-started too, but their joiners are seeded near-cold
+        # (psi=0.5), so they keep the full inner budget.
+        continuation = warm is not None \
+            and np.array_equal(a, st.solve_active)
+        steps = cfg.solver_inner_steps_warm if continuation \
+            else cfg.solver_inner_steps
         return solve_stlf(prob, max_outer=cfg.solver_max_outer,
-                          inner_steps=cfg.solver_inner_steps,
-                          warm_start=self._warm_for(a),
-                          verbose=cfg.verbose)
+                          inner_steps=steps,
+                          inner_tol=cfg.solver_inner_tol,
+                          warm_start=warm, verbose=cfg.verbose)
 
     # ---------------------------------------------------------------- round
     def step(self, t: int) -> dict:
@@ -214,10 +234,12 @@ class SimulationEngine:
         resolved = membership_changed or drift > cfg.resolve_threshold
         warm = False
         solver_iters = 0
+        solver_wall = 0.0
         if resolved:
             warm = st.solver is not None
             res = self._solve(a)
             solver_iters = res.outer_iters
+            solver_wall = res.solve_time_s
             st.solver = res
             st.solve_active = a.copy()
             st.ref_K = st.energy.K.copy()
@@ -252,6 +274,7 @@ class SimulationEngine:
             n_sources=len(src), n_targets=len(tgt),
             resolved=bool(resolved), warm=bool(warm),
             solver_iters=int(solver_iters),
+            solver_wall_s=float(solver_wall),
             drift=float(drift if np.isfinite(drift) else -1.0),
             mean_target_acc=float(acc_mixed[tgt].mean()) if len(tgt)
             else float("nan"),

@@ -9,6 +9,8 @@ Schema (one JSON object per line, one line per round):
   resolved         bool   whether solve_stlf ran this round
   warm             bool   whether that solve was warm-started
   solver_iters     int    outer SCA iterations of that solve (0 if skipped)
+  solver_wall_s    float  wall-clock seconds inside solve_stlf this round
+                          (0.0 if the solve was skipped; nondeterministic)
   drift            float  drift metric vs. the last-solve snapshot
                           (-1.0 on rounds before any snapshot exists)
   mean_target_acc  float  ground-truth accuracy at targets (post-transfer)
@@ -29,7 +31,7 @@ import os
 from typing import IO, List, Optional
 
 # wall-clock / environment-dependent fields, excluded when comparing runs
-NONDETERMINISTIC_FIELDS = ("wall_time_s",)
+NONDETERMINISTIC_FIELDS = ("wall_time_s", "solver_wall_s")
 
 
 @dataclasses.dataclass
@@ -42,6 +44,7 @@ class RoundRecord:
     resolved: bool
     warm: bool
     solver_iters: int
+    solver_wall_s: float
     drift: float
     mean_target_acc: float
     mean_source_acc: float

@@ -1,0 +1,165 @@
+"""Vectorized program packing vs the gp.Posynomial reference: bitwise
+packed-array parity, structured-vs-packed inner-evaluator agreement,
+end-to-end solve equality, and batched-vs-greedy polish equivalence."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bounds import BoundTerms
+from repro.core.energy import EnergyModel
+from repro.core.problem import STLFProblem
+from repro.core import solver
+from repro.core.solver import (
+    build_program, build_program_reference, build_structured,
+    polish_assignment, polish_assignment_reference, solve_stlf,
+    _agm_affine, _objective, _structured_affine, _structured_objective,
+    _structured_violations, _violations)
+
+
+def _random_problem(n, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    eps = rng.uniform(0.05, 1.0, n)
+    div = rng.uniform(0.1, 1.5, (n, n))
+    div = 0.5 * (div + div.T)
+    np.fill_diagonal(div, 0.0)
+    bounds = BoundTerms(eps, np.full(n, 5000), div)
+    return STLFProblem(bounds, EnergyModel.sample(n, rng), **kw)
+
+
+def _assert_terms_equal(a, b, where):
+    for x, y, name in ((a.logc, b.logc, "logc"), (a.vidx, b.vidx, "vidx"),
+                       (a.vexp, b.vexp, "vexp")):
+        x, y = np.asarray(x), np.asarray(y)
+        assert x.shape == y.shape, f"{where}.{name}: {x.shape} != {y.shape}"
+        np.testing.assert_array_equal(x, y, err_msg=f"{where}.{name}")
+
+
+def _assert_programs_equal(v, r):
+    assert len(v.families) == len(r.families)
+    for fi, (fv, fr) in enumerate(zip(v.families, r.families)):
+        _assert_terms_equal(fv.num, fr.num, f"fam{fi}.num")
+        _assert_terms_equal(fv.den, fr.den, f"fam{fi}.den")
+        _assert_terms_equal(fv.ex, fr.ex, f"fam{fi}.ex")
+    _assert_terms_equal(v.o_num, r.o_num, "o_num")
+    _assert_terms_equal(v.o_den, r.o_den, "o_den")
+
+
+# ----------------------------------------------------------- packer parity
+@pytest.mark.parametrize("n", [3, 8])
+def test_vectorized_packer_matches_reference(n):
+    prob = _random_problem(n, seed=n)
+    _assert_programs_equal(build_program(prob),
+                           build_program_reference(prob))
+
+
+@pytest.mark.parametrize("kw", [dict(phi_s=0.0), dict(phi_t=0.0),
+                                dict(phi_e=0.0),
+                                dict(phi_s=0.0, phi_e=0.0)])
+def test_vectorized_packer_matches_reference_degenerate_weights(kw):
+    """Zero phi weights drop whole objective blocks — the vectorized
+    packer must skip exactly the groups the reference skips."""
+    prob = _random_problem(5, seed=3, **kw)
+    _assert_programs_equal(build_program(prob),
+                           build_program_reference(prob))
+
+
+def test_packer_parity_with_structured_divergences():
+    """The Fig. 5-style regimes (zero-divergence rows, identical columns)
+    hit the packer's log(0)-clamping paths."""
+    n = 5
+    eps = np.array([0.05, 0.06, 0.07, 0.08, 0.09])
+    div = np.ones((n, n))
+    np.fill_diagonal(div, 0.0)
+    div[0, :] = 0.0
+    div[:, 0] = 0.0
+    prob = STLFProblem(BoundTerms(eps, np.full(n, 5000), div),
+                       EnergyModel(K=np.full((n, n), 0.003), eps_e=1e-2))
+    _assert_programs_equal(build_program(prob),
+                           build_program_reference(prob))
+
+
+# ------------------------------------------- structured evaluator parity
+def test_structured_loss_matches_packed_loss():
+    """The dense structured evaluator and the generic packed evaluator
+    compute the same objective and the same total constraint violation at
+    arbitrary points (they are two views of the same program)."""
+    prob = _random_problem(8, seed=11)
+    prog = build_program(prob)
+    sp = build_structured(prob)
+    rng = np.random.default_rng(0)
+    z0 = jnp.asarray(np.log(np.maximum(prob.feasible_start(), 1e-12)),
+                     jnp.float32)
+    affs = tuple(_agm_affine(fam.den, z0) for fam in prog.families)
+    aff_o = _agm_affine(prog.o_den, z0)
+    aff_s = jax.jit(_structured_affine)(sp, z0)
+    for _ in range(3):
+        z = z0 + jnp.asarray(rng.uniform(-0.3, 0.3, z0.shape), jnp.float32)
+        op = float(_objective(prog, aff_o, z))
+        os = float(_structured_objective(sp, aff_s, z))
+        np.testing.assert_allclose(os, op, rtol=1e-5)
+        vp = sum(float(jnp.sum(v)) for v in _violations(prog, affs, z))
+        vs = sum(float(jnp.sum(v))
+                 for v in _structured_violations(sp, aff_s, z))
+        np.testing.assert_allclose(vs, vp, rtol=1e-4, atol=1e-5)
+
+
+def test_solve_decisions_structured_vs_packed():
+    prob = _random_problem(8, seed=42)
+    a = solve_stlf(prob, max_outer=4, inner_steps=300)
+    b = solve_stlf(prob, max_outer=4, inner_steps=300, inner_impl="packed")
+    np.testing.assert_array_equal(a.psi, b.psi)
+    np.testing.assert_allclose(a.alpha, b.alpha, atol=1e-5)
+
+
+# ------------------------------------------------- end-to-end equality
+def test_solve_identical_with_vectorized_and_reference_packer(monkeypatch):
+    """Bitwise-identical packed programs => bitwise-identical solves."""
+    prob = _random_problem(8, seed=7)
+    res_v = solve_stlf(prob, max_outer=3, inner_steps=200,
+                       inner_impl="packed")
+    monkeypatch.setattr(solver, "build_program",
+                        solver.build_program_reference)
+    res_r = solve_stlf(prob, max_outer=3, inner_steps=200,
+                       inner_impl="packed")
+    np.testing.assert_array_equal(res_v.psi, res_r.psi)
+    np.testing.assert_array_equal(res_v.alpha, res_r.alpha)
+    np.testing.assert_array_equal(res_v.x_relaxed, res_r.x_relaxed)
+
+
+# ------------------------------------------------- polish equivalence
+@pytest.mark.parametrize("n,seed", [(6, 0), (8, 1), (12, 2)])
+def test_polish_vectorized_matches_greedy(n, seed):
+    prob = _random_problem(n, seed)
+    rng = np.random.default_rng(seed + 100)
+    psi0 = (rng.random(n) < 0.5).astype(float)
+    if psi0.min() == 1.0:
+        psi0[0] = 0.0
+    relaxed = rng.uniform(0.0, 1.0, (n, n))
+    pv, av = polish_assignment(prob, psi0, relaxed)
+    pr, ar = polish_assignment_reference(prob, psi0, relaxed)
+    np.testing.assert_array_equal(pv, pr)
+    np.testing.assert_allclose(av, ar, atol=1e-12)
+
+
+def test_polish_equivalence_edge_cases():
+    prob = _random_problem(6, seed=5)
+    # no relaxed candidate
+    pv, av = polish_assignment(prob, np.array([0., 1., 0., 1., 1., 1.]))
+    pr, ar = polish_assignment_reference(
+        prob, np.array([0., 1., 0., 1., 1., 1.]))
+    np.testing.assert_array_equal(pv, pr)
+    np.testing.assert_allclose(av, ar, atol=1e-12)
+    # degenerate all-targets start (no sources until a flip)
+    pv, av = polish_assignment(prob, np.ones(6))
+    pr, ar = polish_assignment_reference(prob, np.ones(6))
+    np.testing.assert_array_equal(pv, pr)
+    np.testing.assert_allclose(av, ar, atol=1e-12)
+
+
+def test_solver_result_reports_timing():
+    prob = _random_problem(5, seed=9)
+    res = solve_stlf(prob, max_outer=2, inner_steps=100)
+    assert res.solve_time_s > 0.0
+    assert 0.0 < res.pack_time_s < res.solve_time_s
