@@ -16,4 +16,26 @@ python -m repro.sim.run --scenario channel-drift --devices 8 --rounds 2 \
     --samples 40 --train-iters 10 --quiet \
     --out "${REPRO_SIM_LOG:-results/sim/ci_smoke.jsonl}"
 
+# async-gossip execution-layer smoke: local clocks + stragglers +
+# staleness-gated warm re-solves, end-to-end through the CLI
+python -m repro.sim.run --engine async-gossip --scenario stragglers \
+    --devices 8 --rounds 4 --samples 40 --train-iters 8 --div-T 6 \
+    --solver-max-outer 3 --solver-inner-steps 200 --resolve-patience 3 \
+    --quiet --out "${REPRO_SIM_LOG_ASYNC:-results/sim/ci_async_smoke.jsonl}"
+
+# sync determinism gate: same seed twice -> identical deterministic fields
+# (golden-file parity vs the pre-refactor engine runs in the pytest suite)
+python - <<'PY'
+from repro.sim.engine import SimConfig, SimulationEngine
+from repro.sim.metrics import strip_nondeterministic
+smoke = dict(samples_per_device=40, train_iters=8, div_tau=1, div_T=6,
+             solver_max_outer=3, solver_inner_steps=200)
+runs = [SimulationEngine(SimConfig(scenario="channel-drift", devices=6,
+                                   rounds=2, seed=0, **smoke)).run()
+        for _ in range(2)]
+assert strip_nondeterministic(runs[0]) == strip_nondeterministic(runs[1]), \
+    "sync engine lost per-seed determinism"
+print("ci.sh: sync determinism OK")
+PY
+
 echo "ci.sh: all green"

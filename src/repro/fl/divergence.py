@@ -145,9 +145,17 @@ def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
 
 def update_divergences(div: np.ndarray, clients: StackedClients, key,
                        pairs, *, tau: int = 4, T: int = 25, batch: int = 10,
-                       lr: float = 0.01) -> np.ndarray:
+                       lr: float = 0.01, ema=0.0) -> np.ndarray:
     """Incrementally refresh ``div`` on the given (P, 2) pairs only and
-    return the merged copy (Algorithm 1 run just for the dirty links)."""
+    return the merged copy (Algorithm 1 run just for the dirty links).
+
+    ``ema``: weight given to the OLD value when merging — scalar or
+    per-pair (P,) array.  0 (default) replaces outright, the original
+    behavior; the async-gossip executor passes ``div_ema`` for pairs
+    whose link was estimated before, so repeated gossip meetings average
+    the Algorithm-1 estimator's sampling noise instead of churning the
+    solver input (and 0 for never-estimated pairs, which have no old
+    value to keep)."""
     pairs = np.atleast_2d(np.asarray(pairs, np.int32))
     out = np.array(div, float, copy=True)
     if pairs.size == 0:
@@ -155,6 +163,7 @@ def update_divergences(div: np.ndarray, clients: StackedClients, key,
     fresh = estimate_divergences(clients, key, tau=tau, T=T, batch=batch,
                                  lr=lr, pairs=pairs)
     pi, pj = pairs[:, 0], pairs[:, 1]        # vectorized symmetric scatter
-    out[pi, pj] = fresh[pi, pj]
-    out[pj, pi] = fresh[pj, pi]
+    w = np.broadcast_to(np.asarray(ema, float), pi.shape)
+    out[pi, pj] = w * out[pi, pj] + (1.0 - w) * fresh[pi, pj]
+    out[pj, pi] = w * out[pj, pi] + (1.0 - w) * fresh[pj, pi]
     return out

@@ -7,11 +7,18 @@ continues in one batched call per round, divergence estimates refresh
 incrementally, and the (P) solver re-runs — warm-started from the previous
 solution — only when the measured drift exceeds a threshold.
 
+Execution modes (repro.sim.executors): the classic synchronous round
+pipeline (``sync``) and event-driven ticks with heterogeneous device
+clocks + random pairwise gossip (``async-gossip``).
+
 Entry points:
   python -m repro.sim.run --scenario channel-drift --devices 64 --rounds 20
+  python -m repro.sim.run --engine async-gossip --scenario stragglers ...
   SimulationEngine(SimConfig(...)).run()
 """
+from repro.sim.clock import DeviceClocks  # noqa: F401
 from repro.sim.engine import SimConfig, SimulationEngine  # noqa: F401
+from repro.sim.executors import EXECUTORS, get_executor  # noqa: F401
 from repro.sim.metrics import MetricsLogger, read_jsonl  # noqa: F401
 from repro.sim.scenarios import SCENARIOS, get_scenario  # noqa: F401
 from repro.sim.state import NetworkState  # noqa: F401

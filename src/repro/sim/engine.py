@@ -1,23 +1,27 @@
-"""Simulation engine: advances a NetworkState round by round.
+"""Simulation engine: state + solver plumbing; executors drive the ticks.
 
-Round pipeline (one `step()`):
-  1. scenario mutation (drift / churn / label arrival) -> events
-  2. batched local training + measurement refresh: ONE compiled call for
-     the whole device axis (repro.sim.training.network_step)
-  3. incremental divergence refresh: only never-estimated active pairs run
-     Algorithm 1 (device data is immutable except for label reveals, which
-     do not move the feature distribution)
-  4. drift-gated (P) re-solve: solve_stlf runs only when the measured
-     drift vs the last-solve snapshot exceeds ``resolve_threshold`` or
-     membership changed; re-solves are warm-started from the previous
-     SolverResult (remapped over churn)
-  5. transfer + evaluation + JSONL metrics
+The per-tick control flow lives in the execution layer
+(repro.sim.executors): ``SyncExecutor`` runs the original five-phase
+round pipeline (scenario mutation -> batched training -> divergence
+refresh -> drift-gated re-solve -> transfer/eval/metrics), and
+``AsyncGossipExecutor`` runs event-driven ticks where devices progress
+on heterogeneous local clocks and exchange over random gossip pairs.
+The engine itself owns what both share:
+
+  - NetworkState construction (fixed-size pool, spares for churn)
+  - the scenario mutation API (drift_channels / set_active /
+    reveal_labels / set_tick_period)
+  - the drift metric against the last-solve snapshot
+  - warm-started (P) re-solves (previous SolverResult remapped over
+    churn) and installation of the solved assignment
+  - churn-robust re-seeding: a (re)joining device adopts the current
+    best source mixture instead of keeping stale (or fresh-init) params
+  - the JSONL metrics logger
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import List, Optional
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -29,14 +33,11 @@ from repro.core.problem import STLFProblem
 from repro.core.solver import SolverResult, solve_stlf
 from repro.data.partition import build_network, make_device, reveal_labels
 from repro.fl.client import init_client_params, stack_clients
-from repro.fl.divergence import update_divergences
-from repro.fl.transfer import apply_transfer, column_normalize
-from repro.sim.metrics import MetricsLogger, RoundRecord
+from repro.fl.transfer import column_normalize
+from repro.sim.executors import get_executor
+from repro.sim.metrics import MetricsLogger
 from repro.sim.scenarios import get_scenario
 from repro.sim.state import NetworkState
-from repro.sim.training import mixed_accuracies, network_step
-
-LINK_THRESH = 1e-3
 
 
 @dataclasses.dataclass
@@ -48,6 +49,14 @@ class SimConfig:
     setting: str = "M//MM"
     samples_per_device: int = 100
     spares: int = -1             # -1: let the scenario choose
+    # execution layer (repro.sim.executors)
+    engine: str = "sync"
+    #: alpha weight above which a link counts as active (transmissions,
+    #: link_churn, and the async gossip exchanges all use this)
+    link_thresh: float = 1e-3
+    #: churn-robust transfer: re-seed a (re)joining device's params from
+    #: the current best source mixture of the last solved assignment
+    reseed_on_rejoin: bool = True
     # per-round local training
     train_iters: int = 30
     batch: int = 10
@@ -70,12 +79,36 @@ class SimConfig:
     # inner-loop early-stop safety valve (see solve_stlf inner_tol)
     solver_inner_tol: float = 1e-4
     resolve_threshold: float = 0.05
+    # async-gossip executor knobs
+    #: per-device tick periods are sampled uniformly from this set
+    tick_periods: Tuple[int, ...] = (1, 2, 4)
+    #: gossip meetings per tick; -1: n_active // 4 (at least 1)
+    gossip_pairs: int = -1
+    #: blend step size of a gossip model exchange (scales the solved
+    #: alpha weight of the link)
+    gossip_mix: float = 0.5
+    #: staleness bound: warm re-solve once the installed assignment is
+    #: this many ticks old, even if measured drift stays under threshold
+    #: (async executor only; <= 0 disables)
+    resolve_patience: int = 10
+    #: EMA weight on the OLD estimate when a gossip pair re-runs
+    #: Algorithm 1 on an already-estimated link
+    div_ema: float = 0.5
+    #: solver-input divergence for never-estimated pairs (async measures
+    #: lazily; an unmeasured link must not look BETTER than a measured
+    #: one, so unknowns carry a pessimistic prior; <= 0 disables).
+    #: d_H ranges over [0, 2]; 1.0 is the midpoint.
+    div_prior: float = 1.0
     # scenario knobs (read by scenarios.py via getattr)
     drift_sigma: float = 0.15
     churn_p_leave: float = 0.35
     churn_p_join: float = 0.35
     label_frac: float = 0.25
     label_p_device: float = 0.5
+    retick_p: float = 0.1
+    straggler_frac: float = 0.25
+    straggler_period: int = 8
+    straggler_p_swap: float = 0.1
     log_path: Optional[str] = None
     verbose: bool = False
 
@@ -116,14 +149,22 @@ class SimulationEngine:
         self._membership_dirty = False
         self._prev_links: set = set()
         self._energy_cum = 0.0
+        self._solve_tick = -1
+        self.executor = get_executor(cfg.engine)(self)
+        self.executor.setup()
+        self.scenario.setup(self)
 
     # ------------------------------------------------- scenario mutation API
     def drift_channels(self, rng: np.random.Generator, sigma: float):
         self.state.energy = self.state.energy.drift(rng, sigma)
 
     def set_active(self, device: int, flag: bool):
+        was = bool(self.state.active[device])
         self.state.active[device] = flag
         self._membership_dirty = True
+        if flag and not was and self.cfg.reseed_on_rejoin \
+                and self.state.solver is not None:
+            self._reseed_device(device)
 
     def reveal_labels(self, device: int, frac: float,
                       rng: np.random.Generator):
@@ -131,7 +172,42 @@ class SimulationEngine:
                                                 frac, rng)
         self._restack = True
 
+    def set_tick_period(self, device: int, period: int):
+        """Re-rate one device's local clock (no-op under executors that
+        keep no clocks, i.e. sync)."""
+        if self.state.clocks is not None:
+            self.state.clocks.set_period(device, period)
+
     # ------------------------------------------------------------ internals
+    def _reseed_device(self, j: int):
+        """Churn-robust transfer: a (re)joining device adopts the
+        consensus source mixture of the last solved assignment (the mean
+        of the column-normalized alpha over its target columns — exactly
+        the embedded ``state.alpha``) applied to the sources' CURRENT
+        params, instead of keeping whatever it held when it left (or its
+        fresh initialization, for first-time joiners from the spare
+        pool)."""
+        st = self.state
+        sa = np.asarray(st.solve_active)
+        psi_sv = st.psi[sa]
+        srcs = sa[psi_sv == 0.0]
+        tgts = sa[psi_sv == 1.0]
+        if len(srcs) == 0:
+            return
+        if len(tgts):
+            w = st.alpha[:, tgts].mean(axis=1)
+        else:
+            w = np.zeros(st.pool_size)
+        if w.sum() <= 1e-12:
+            w = np.zeros(st.pool_size)
+            w[srcs[int(np.argmin(st.eps_hat[srcs]))]] = 1.0
+        w = w / w.sum()
+        wj = jnp.asarray(w, jnp.float32)
+        st.params = jax.tree_util.tree_map(
+            lambda p: p.at[j].set(
+                jnp.einsum("s,s...->...", wj.astype(p.dtype), p)),
+            st.params)
+
     def _drift_metric(self) -> float:
         st = self.state
         if st.solver is None or st.ref_K is None:
@@ -143,7 +219,8 @@ class SimulationEngine:
         dk = float(np.abs(cur_k - ref_k).mean()
                    / max(float(ref_k.mean()), 1e-12))
         de = float(np.abs(st.eps_hat[a] - st.ref_eps[a]).mean())
-        dd = float(np.abs(st.div_hat[sub] - st.ref_div[sub]).mean())
+        dd = float(np.abs(self._divergence_view()[sub]
+                          - st.ref_div[sub]).mean())
         return dk + de + dd
 
     def _warm_for(self, a: np.ndarray) -> Optional[SolverResult]:
@@ -174,12 +251,33 @@ class SimulationEngine:
             objective_parts={}, converged=False, outer_iters=0,
             x_relaxed=None)
 
+    def _divergence_view(self) -> np.ndarray:
+        """Full-pool divergences as the SOLVER sees them.  Executors
+        that measure pairs lazily (async gossip) substitute
+        ``div_prior`` for never-estimated pairs: the div_hat init of 0
+        is the most OPTIMISTIC possible value, and feeding it to the
+        solver would concentrate alpha on exactly the links nobody
+        measured.  The drift metric and the re-solve reference snapshot
+        use the same view, so a gossip measurement registers drift only
+        to the extent it DIFFERS from the prior the solver assumed —
+        not by merely arriving.  Under sync every active pair is
+        estimated before any solve and this is the raw measured matrix
+        (exactly the pre-refactor behavior, golden-pinned)."""
+        st, cfg = self.state, self.cfg
+        if not self.executor.divergence_prior_view or cfg.div_prior <= 0:
+            return st.div_hat
+        div = np.array(st.div_hat, float, copy=True)
+        unknown = ~st.div_known
+        np.fill_diagonal(unknown, False)
+        div[unknown] = cfg.div_prior
+        return div
+
     def _solve(self, a: np.ndarray) -> SolverResult:
         st, cfg = self.state, self.cfg
         sub = np.ix_(a, a)
         counts = np.asarray(st.clients.counts)
         bounds = BoundTerms(eps_hat=st.eps_hat[a], n_data=counts[a],
-                            div_hat=st.div_hat[sub])
+                            div_hat=self._divergence_view()[sub])
         prob = STLFProblem(bounds,
                            EnergyModel(K=st.energy.K[sub],
                                        eps_e=st.energy.eps_e),
@@ -199,101 +297,27 @@ class SimulationEngine:
                           inner_tol=cfg.solver_inner_tol,
                           warm_start=warm, verbose=cfg.verbose)
 
+    def _install_solution(self, a: np.ndarray, res: SolverResult, t: int):
+        """Adopt a fresh SolverResult: embed psi/alpha at pool indices,
+        snapshot the drift references, stamp the solve tick."""
+        st = self.state
+        st.solver = res
+        st.solve_active = a.copy()
+        st.ref_K = st.energy.K.copy()
+        st.ref_eps = st.eps_hat.copy()
+        st.ref_div = self._divergence_view().copy()
+        st.psi = np.zeros(st.pool_size)
+        st.alpha = np.zeros((st.pool_size, st.pool_size))
+        st.psi[a] = res.psi
+        st.alpha[np.ix_(a, a)] = column_normalize(
+            res.alpha, res.psi, energy_K=st.energy.K[np.ix_(a, a)],
+            eps_hat=st.eps_hat[a])
+        self._membership_dirty = False
+        self._solve_tick = t
+
     # ---------------------------------------------------------------- round
     def step(self, t: int) -> dict:
-        st, cfg = self.state, self.cfg
-        t0 = time.time()
-        events = self.scenario.step(self, t)
-        if self._restack:
-            st.clients = stack_clients(st.pool)
-            self._restack = False
-
-        # 2. batched train + measure (one compiled call over the pool)
-        k_round = jax.random.fold_in(self.key, t)
-        st.params, eps, acc = network_step(
-            st.params, st.clients, k_round, jnp.asarray(st.active),
-            iters=cfg.train_iters, batch=cfg.batch, lr=cfg.lr)
-        st.eps_hat = np.asarray(eps, float)
-        st.own_acc = np.asarray(acc, float)
-
-        # 3. incremental divergence refresh
-        pairs = st.unknown_active_pairs()
-        if len(pairs):
-            k_div = jax.random.fold_in(k_round, 1)
-            st.div_hat = update_divergences(
-                st.div_hat, st.clients, k_div, pairs, tau=cfg.div_tau,
-                T=cfg.div_T, batch=cfg.batch, lr=cfg.lr)
-            for i, j in pairs:
-                st.div_known[i, j] = st.div_known[j, i] = True
-
-        # 4. drift-gated warm re-solve
-        a = st.active_idx
-        drift = self._drift_metric()
-        membership_changed = self._membership_dirty or st.solver is None \
-            or not np.array_equal(a, st.solve_active)
-        resolved = membership_changed or drift > cfg.resolve_threshold
-        warm = False
-        solver_iters = 0
-        solver_wall = 0.0
-        if resolved:
-            warm = st.solver is not None
-            res = self._solve(a)
-            solver_iters = res.outer_iters
-            solver_wall = res.solve_time_s
-            st.solver = res
-            st.solve_active = a.copy()
-            st.ref_K = st.energy.K.copy()
-            st.ref_eps = st.eps_hat.copy()
-            st.ref_div = st.div_hat.copy()
-            st.psi = np.zeros(st.pool_size)
-            st.alpha = np.zeros((st.pool_size, st.pool_size))
-            st.psi[a] = res.psi
-            st.alpha[np.ix_(a, a)] = column_normalize(
-                res.alpha, res.psi, energy_K=st.energy.K[np.ix_(a, a)],
-                eps_hat=st.eps_hat[a])
-            self._membership_dirty = False
-
-        # 5. transfer + evaluation
-        mixed = apply_transfer(st.params, jnp.asarray(st.alpha),
-                               jnp.asarray(st.psi))
-        st.params = mixed                        # targets adopt mixtures
-        acc_mixed = np.asarray(mixed_accuracies(mixed, st.clients), float)
-
-        src = a[st.psi[a] == 0.0]
-        tgt = a[st.psi[a] == 1.0]
-        links = {(int(i), int(j)) for i, j in zip(
-            *np.nonzero(st.alpha > LINK_THRESH))}
-        union = links | self._prev_links
-        churn = len(links ^ self._prev_links) / max(len(union), 1)
-        self._prev_links = links
-        round_energy = st.energy.energy(st.alpha)
-        self._energy_cum += round_energy
-
-        record = RoundRecord(
-            round=t, scenario=cfg.scenario, n_active=len(a),
-            n_sources=len(src), n_targets=len(tgt),
-            resolved=bool(resolved), warm=bool(warm),
-            solver_iters=int(solver_iters),
-            solver_wall_s=float(solver_wall),
-            drift=float(drift if np.isfinite(drift) else -1.0),
-            mean_target_acc=float(acc_mixed[tgt].mean()) if len(tgt)
-            else float("nan"),
-            mean_source_acc=float(acc_mixed[src].mean()) if len(src)
-            else float("nan"),
-            energy=float(round_energy),
-            energy_cum=float(self._energy_cum),
-            transmissions=st.energy.transmissions(st.alpha),
-            link_churn=float(churn), events=events,
-            wall_time_s=time.time() - t0)
-        row = self.logger.log(record)
-        if cfg.verbose:
-            print(f"[sim] round {t}: active={len(a)} "
-                  f"src={len(src)} tgt={len(tgt)} "
-                  f"resolve={resolved} ({solver_iters} it, warm={warm}) "
-                  f"tgt_acc={record.mean_target_acc:.3f} "
-                  f"energy={record.energy:.3f}")
-        st.round = t + 1
-        return row
+        return self.executor.step(t)
 
     def run(self) -> List[dict]:
         try:

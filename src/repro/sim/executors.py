@@ -1,0 +1,385 @@
+"""Execution layer: HOW the network advances one global tick.
+
+The engine owns state, scenarios, solver plumbing and metrics; an
+Executor owns the per-tick control flow.  Two implementations:
+
+``sync`` (SyncExecutor)
+    The original round pipeline, behavior-preserving (parity-tested
+    against pre-refactor JSONL output): every active device trains each
+    round, never-estimated active pairs run Algorithm 1, the drift gate
+    decides a warm re-solve, and the full alpha-mixture transfer is
+    applied globally.
+
+``async-gossip`` (AsyncGossipExecutor)
+    Devices progress on heterogeneous local clocks (repro.sim.clock):
+    only clock-eligible devices train on a given global tick (still ONE
+    jitted ``network_step`` call — the ineligible lanes are masked out),
+    and instead of a global transfer phase, random gossip pairs meet
+    each tick: a meeting pair refreshes its Algorithm-1 divergence
+    through ``update_divergences``' pair-incremental path (EMA-merged
+    into the running estimate) and exchanges models along the currently
+    solved alpha links (an incremental, link-local realization of the
+    same mixture the sync engine applies in one shot).  The re-solve
+    gate adds a staleness term: when the installed assignment has
+    outlived ``resolve_patience`` ticks it is warm re-solved even if the
+    sparsely-refreshed measurements alone keep the drift metric under
+    threshold (sparse refresh systematically undercounts change, so age
+    bounds the error — the classic bounded-staleness rule of async FL).
+
+Measurement semantics under async: ``eps_hat`` / ``own_acc`` only
+refresh for devices that actually ticked, so the solver sees exactly the
+information a decentralized deployment would have.  Algorithm-1 gossip
+traffic is unpriced, matching the sync engine; the energy/transmissions
+metrics price the model exchanges of the tick.
+"""
+from __future__ import annotations
+
+import time
+from typing import TYPE_CHECKING, Dict, List, Tuple, Type
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.client import stack_clients
+from repro.fl.divergence import update_divergences
+from repro.fl.transfer import apply_transfer
+from repro.sim.clock import DeviceClocks
+from repro.sim.metrics import RoundRecord
+from repro.sim.training import mixed_accuracies, network_step
+
+if TYPE_CHECKING:                                   # no import cycle
+    from repro.sim.engine import SimulationEngine
+
+EXECUTORS: Dict[str, Type["Executor"]] = {}
+
+
+def register(name: str):
+    def deco(cls):
+        cls.name = name
+        EXECUTORS[name] = cls
+        return cls
+    return deco
+
+
+def get_executor(name: str) -> Type["Executor"]:
+    if name not in EXECUTORS:
+        raise KeyError(f"unknown engine {name!r}; "
+                       f"available: {sorted(EXECUTORS)}")
+    return EXECUTORS[name]
+
+
+class Executor:
+    """Per-tick control flow over a SimulationEngine's state.  The
+    helpers below are the blocks both executors share verbatim; step()
+    wires them around the mode-specific training/measurement phases."""
+
+    name = "base"
+    #: lazily-measuring executors set this so the engine's divergence
+    #: view (solver input, drift metric, re-solve snapshot) substitutes
+    #: cfg.div_prior for never-estimated pairs
+    divergence_prior_view = False
+
+    def __init__(self, engine: "SimulationEngine"):
+        self.engine = engine
+
+    def setup(self):
+        """Called once at engine init, before the scenario's setup."""
+
+    def step(self, t: int) -> dict:
+        raise NotImplementedError
+
+    # --------------------------------------------------- shared phases
+    def _begin(self, t: int):
+        """Phase 1: scenario mutation (+ restack after label reveals).
+        Returns (tick start time, scenario events)."""
+        eng = self.engine
+        t0 = time.time()
+        events = eng.scenario.step(eng, t)
+        if eng._restack:
+            eng.state.clients = stack_clients(eng.state.pool)
+            eng._restack = False
+        return t0, events
+
+    def _gate(self, a: np.ndarray, t: int, drift: float,
+              patience: int = 0):
+        """The re-solve decision ladder.  ``patience`` > 0 adds the
+        bounded-staleness rule (async): re-solve once the installed
+        assignment is that many ticks old.  Returns (reason, solve_age);
+        reason None means no re-solve."""
+        eng, st, cfg = self.engine, self.engine.state, self.engine.cfg
+        solve_age = t - eng._solve_tick if st.solver is not None else -1
+        membership_changed = eng._membership_dirty or st.solver is None \
+            or not np.array_equal(a, st.solve_active)
+        if st.solver is None:
+            reason = "cold"
+        elif membership_changed:
+            reason = "membership"
+        elif drift > cfg.resolve_threshold:
+            reason = "drift"
+        elif patience > 0 and solve_age >= patience:
+            reason = "staleness"
+        else:
+            reason = None
+        return reason, solve_age
+
+    def _run_solve(self, a: np.ndarray, t: int):
+        """Warm-started re-solve + installation.  Returns
+        (warm, outer_iters, solve wall seconds)."""
+        eng = self.engine
+        warm = eng.state.solver is not None
+        res = eng._solve(a)
+        eng._install_solution(a, res, t)
+        return warm, res.outer_iters, res.solve_time_s
+
+    def _link_churn(self) -> float:
+        """Jaccard distance of the active-link set vs. the previous
+        tick (links = solved alpha above link_thresh)."""
+        eng, st, cfg = self.engine, self.engine.state, self.engine.cfg
+        links = {(int(i), int(j)) for i, j in zip(
+            *np.nonzero(st.alpha > cfg.link_thresh))}
+        union = links | eng._prev_links
+        churn = len(links ^ eng._prev_links) / max(len(union), 1)
+        eng._prev_links = links
+        return churn
+
+    def _emit(self, *, t, t0, a, acc, events, resolved, warm,
+              solver_iters, solver_wall, drift, energy, transmissions,
+              churn, solve_age, reason, **extras):
+        """Build + log the tick's RoundRecord from the shared fields;
+        mode-specific fields come in through ``extras``.  Returns
+        (logged row, record)."""
+        eng, st, cfg = self.engine, self.engine.state, self.engine.cfg
+        src = a[st.psi[a] == 0.0]
+        tgt = a[st.psi[a] == 1.0]
+        eng._energy_cum += energy
+        record = RoundRecord(
+            round=t, scenario=cfg.scenario, n_active=len(a),
+            n_sources=len(src), n_targets=len(tgt),
+            resolved=bool(resolved), warm=bool(warm),
+            solver_iters=int(solver_iters),
+            solver_wall_s=float(solver_wall),
+            drift=float(drift if np.isfinite(drift) else -1.0),
+            mean_target_acc=float(acc[tgt].mean()) if len(tgt)
+            else float("nan"),
+            mean_source_acc=float(acc[src].mean()) if len(src)
+            else float("nan"),
+            energy=float(energy),
+            energy_cum=float(eng._energy_cum),
+            transmissions=int(transmissions),
+            link_churn=float(churn), events=events,
+            wall_time_s=time.time() - t0,
+            engine=self.name, solve_age=int(solve_age),
+            resolve_reason=reason, **extras)
+        row = eng.logger.log(record)
+        st.round = t + 1
+        return row, record
+
+
+@register("sync")
+class SyncExecutor(Executor):
+    """The original synchronous round pipeline (see module docstring)."""
+
+    def step(self, t: int) -> dict:
+        eng = self.engine
+        st, cfg = eng.state, eng.cfg
+        t0, events = self._begin(t)
+
+        # 2. batched train + measure (one compiled call over the pool)
+        k_round = jax.random.fold_in(eng.key, t)
+        st.params, eps, acc = network_step(
+            st.params, st.clients, k_round, jnp.asarray(st.active),
+            iters=cfg.train_iters, batch=cfg.batch, lr=cfg.lr)
+        st.eps_hat = np.asarray(eps, float)
+        st.own_acc = np.asarray(acc, float)
+
+        # 3. incremental divergence refresh
+        pairs = st.unknown_active_pairs()
+        if len(pairs):
+            k_div = jax.random.fold_in(k_round, 1)
+            st.div_hat = update_divergences(
+                st.div_hat, st.clients, k_div, pairs, tau=cfg.div_tau,
+                T=cfg.div_T, batch=cfg.batch, lr=cfg.lr)
+            for i, j in pairs:
+                st.div_known[i, j] = st.div_known[j, i] = True
+
+        # 4. drift-gated warm re-solve
+        a = st.active_idx
+        drift = eng._drift_metric()
+        reason, solve_age = self._gate(a, t, drift)
+        resolved = reason is not None
+        warm, solver_iters, solver_wall = False, 0, 0.0
+        if resolved:
+            warm, solver_iters, solver_wall = self._run_solve(a, t)
+
+        # 5. transfer + evaluation
+        mixed = apply_transfer(st.params, jnp.asarray(st.alpha),
+                               jnp.asarray(st.psi))
+        st.params = mixed                        # targets adopt mixtures
+        acc_mixed = np.asarray(mixed_accuracies(mixed, st.clients), float)
+
+        churn = self._link_churn()
+        row, record = self._emit(
+            t=t, t0=t0, a=a, acc=acc_mixed, events=events,
+            resolved=resolved, warm=warm, solver_iters=solver_iters,
+            solver_wall=solver_wall, drift=drift,
+            energy=st.energy.energy(st.alpha),
+            transmissions=st.energy.transmissions(
+                st.alpha, thresh=cfg.link_thresh),
+            churn=churn, solve_age=solve_age, reason=reason,
+            n_trained=int(np.sum(np.asarray(
+                jnp.any(st.clients.labeled, axis=1))[a])))
+        if cfg.verbose:
+            print(f"[sim] round {t}: active={len(a)} "
+                  f"src={record.n_sources} tgt={record.n_targets} "
+                  f"resolve={resolved} ({solver_iters} it, warm={warm}) "
+                  f"tgt_acc={record.mean_target_acc:.3f} "
+                  f"energy={record.energy:.3f}")
+        return row
+
+
+@register("async-gossip")
+class AsyncGossipExecutor(Executor):
+    """Event-driven ticks: local clocks + random pairwise gossip (see
+    module docstring)."""
+
+    divergence_prior_view = True
+
+    def setup(self):
+        eng, cfg = self.engine, self.engine.cfg
+        # separate streams so the sync path's RNG draws are untouched
+        self.clock_rng = np.random.default_rng(cfg.seed + 2)
+        self.gossip_rng = np.random.default_rng(cfg.seed + 3)
+        eng.state.clocks = DeviceClocks.sample(
+            eng.state.pool_size, cfg.tick_periods, self.clock_rng)
+
+    # ------------------------------------------------------------- gossip
+    def _select_pairs(self, active_idx: np.ndarray) -> List[Tuple[int, int]]:
+        """Disjoint random pairs among the active devices.  The pair
+        count is held constant across ticks (``gossip_pairs``, default
+        n_active // 4) so the vmapped pair-divergence kernel compiles
+        once; when the active set is too small the count shrinks to
+        n_active // 2."""
+        cfg = self.engine.cfg
+        g = cfg.gossip_pairs if cfg.gossip_pairs > 0 \
+            else max(len(active_idx) // 4, 1)
+        g = min(g, len(active_idx) // 2)
+        if g < 1:
+            return []
+        perm = self.gossip_rng.permutation(active_idx)
+        return [(int(perm[2 * k]), int(perm[2 * k + 1])) for k in range(g)]
+
+    def _gossip_divergences(self, pairs, k_round):
+        """Pair-incremental Algorithm-1 refresh for this tick's meetings.
+        Known pairs EMA-merge the fresh estimate (cfg.div_ema on the old
+        value); never-estimated pairs take it outright."""
+        st, cfg = self.engine.state, self.engine.cfg
+        parr = np.asarray(pairs, np.int32)
+        pi, pj = parr[:, 0], parr[:, 1]
+        ema = np.where(st.div_known[pi, pj], cfg.div_ema, 0.0)
+        k_div = jax.random.fold_in(k_round, 1)
+        st.div_hat = update_divergences(
+            st.div_hat, st.clients, k_div, parr, tau=cfg.div_tau,
+            T=cfg.div_T, batch=cfg.batch, lr=cfg.lr, ema=ema)
+        st.div_known[pi, pj] = st.div_known[pj, pi] = True
+
+    def _gossip_models(self, pairs) -> Tuple[np.ndarray, int]:
+        """Model exchange along solved links: inside each meeting pair,
+        a target pulls its partner's model with the solved alpha weight
+        (scaled by ``gossip_mix``) — the link-local, incremental
+        realization of the sync engine's one-shot alpha-mixture.
+        Returns (B, n_exchanges): B[s, d] holds this tick's transfer
+        weights, for energy accounting.
+
+        The updates are indexed row writes, not a dense combine: a tick
+        touches at most 2*gossip_pairs rows, so mixing through the full
+        (P, P) blend matrix would be O(P^2) work for O(pairs) change."""
+        st, cfg = self.engine.state, self.engine.cfg
+        used = np.zeros((st.pool_size, st.pool_size))
+        blends = []
+        for i, j in pairs:
+            for s, d in ((i, j), (j, i)):
+                w = st.alpha[s, d]
+                if st.psi[d] == 1.0 and w > cfg.link_thresh:
+                    used[s, d] = cfg.gossip_mix * float(w)
+                    blends.append((s, d, used[s, d]))
+        if blends:
+            # sources of solved links have psi=0 and are never blend
+            # destinations, and disjoint pairs touch each destination at
+            # most once — reading the pre-tick leaf is exact
+            def mix(leaf):
+                out = leaf
+                for s, d, m in blends:
+                    m = jnp.asarray(m, leaf.dtype)
+                    out = out.at[d].set((1 - m) * leaf[d] + m * leaf[s])
+                return out
+
+            st.params = jax.tree_util.tree_map(mix, st.params)
+        return used, len(blends)
+
+    # --------------------------------------------------------------- tick
+    def step(self, t: int) -> dict:
+        eng = self.engine
+        st, cfg = eng.state, eng.cfg
+        t0, events = self._begin(t)
+
+        # 2. masked local training: only clock-eligible devices step
+        elig = np.logical_and(st.active, st.clocks.eligible(t))
+        e_idx = np.flatnonzero(elig)
+        k_round = jax.random.fold_in(eng.key, t)
+        st.params, eps, acc = network_step(
+            st.params, st.clients, k_round, jnp.asarray(st.active),
+            jnp.asarray(elig), iters=cfg.train_iters, batch=cfg.batch,
+            lr=cfg.lr)
+        # measurements refresh only where a device actually ticked —
+        # everyone else's view stays stale, as it would in deployment
+        st.eps_hat[e_idx] = np.asarray(eps, float)[e_idx]
+        st.own_acc[e_idx] = np.asarray(acc, float)[e_idx]
+        # but only devices with labeled data actually TRAIN on a tick
+        # (network_step's update mask); unlabeled devices progress
+        # through gossip alone and must read as stale until they do
+        labeled_dev = np.asarray(jnp.any(st.clients.labeled, axis=1))
+        t_idx = np.flatnonzero(np.logical_and(elig, labeled_dev))
+        st.clocks.mark_trained(t_idx, t)
+
+        # 3. gossip: pairwise divergence refresh + model exchange
+        a = st.active_idx
+        pairs = self._select_pairs(a)
+        if pairs:
+            self._gossip_divergences(pairs, k_round)
+        used, n_exchanges = self._gossip_models(pairs)
+
+        # 4. drift + staleness gated warm re-solve
+        drift = eng._drift_metric()
+        reason, solve_age = self._gate(a, t, drift,
+                                       patience=cfg.resolve_patience)
+        resolved = reason is not None
+        warm, solver_iters, solver_wall = False, 0, 0.0
+        if resolved:
+            warm, solver_iters, solver_wall = self._run_solve(a, t)
+
+        # 5. evaluation + metrics (no global transfer phase: targets
+        # converge to their mixtures through the gossip exchanges above)
+        acc_now = np.asarray(mixed_accuracies(st.params, st.clients),
+                             float)
+        churn = self._link_churn()
+        stale_dev = st.clocks.staleness(t)[a] if len(a) \
+            else np.zeros(1, int)
+        row, record = self._emit(
+            t=t, t0=t0, a=a, acc=acc_now, events=events,
+            resolved=resolved, warm=warm, solver_iters=solver_iters,
+            solver_wall=solver_wall, drift=drift,
+            energy=st.energy.energy(used),
+            transmissions=n_exchanges, churn=churn,
+            solve_age=solve_age, reason=reason,
+            n_trained=len(t_idx), trained=[int(i) for i in t_idx],
+            gossip=[[int(i), int(j)] for i, j in pairs],
+            mean_staleness=float(stale_dev.mean()),
+            max_staleness=float(stale_dev.max()))
+        if cfg.verbose:
+            print(f"[sim] tick {t}: active={len(a)} "
+                  f"trained={len(t_idx)} gossip={len(pairs)} "
+                  f"resolve={resolved} ({reason}) "
+                  f"stale={record.mean_staleness:.1f} "
+                  f"tgt_acc={record.mean_target_acc:.3f}")
+        return row

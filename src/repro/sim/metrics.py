@@ -22,6 +22,30 @@ Schema (one JSON object per line, one line per round):
   events           list   scenario events applied this round
   wall_time_s      float  wall-clock seconds for the round (excluded from
                           determinism comparisons)
+
+Execution-layer fields (added with the executor refactor; the sync
+executor fills the first two and the gate fields, async-only fields keep
+their defaults under sync):
+  engine           str    executor that produced the tick (sync |
+                          async-gossip)
+  n_trained        int    devices whose local SGD actually applied this
+                          tick — active AND labeled, further restricted
+                          to the clock-eligible subset under async
+                          (unlabeled devices never train; they progress
+                          through transfer/gossip alone)
+  trained          list?  async: device ids that trained this tick
+                          (null under sync)
+  gossip           list?  async: [i, j] gossip meetings of this tick
+                          (null under sync)
+  mean_staleness   float  async: mean ticks since each active device
+                          last trained (-1.0 under sync)
+  max_staleness    float  async: max of the same (-1.0 under sync)
+  solve_age        int    ticks since the installed assignment was
+                          solved, measured entering the tick (-1 before
+                          the first solve)
+  resolve_reason   str?   why the gate fired: cold | membership | drift
+                          | staleness (async staleness bound); null when
+                          no re-solve ran
 """
 from __future__ import annotations
 
@@ -54,6 +78,15 @@ class RoundRecord:
     link_churn: float
     events: List[dict]
     wall_time_s: float
+    # execution-layer fields (defaults = the sync engine's view)
+    engine: str = "sync"
+    n_trained: int = -1
+    trained: Optional[List[int]] = None
+    gossip: Optional[List[List[int]]] = None
+    mean_staleness: float = -1.0
+    max_staleness: float = -1.0
+    solve_age: int = -1
+    resolve_reason: Optional[str] = None
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

@@ -1,8 +1,9 @@
 """CLI: python -m repro.sim.run --scenario channel-drift --devices 64
---rounds 20
+--rounds 20 [--engine sync|async-gossip]
 
-Runs a scenario and writes the per-round JSONL metrics log (schema:
-repro.sim.metrics).  Prints a short end-of-run summary.
+Runs a scenario under the chosen execution mode and writes the per-round
+JSONL metrics log (schema: repro.sim.metrics).  Prints a short
+end-of-run summary.
 """
 from __future__ import annotations
 
@@ -13,6 +14,7 @@ import sys
 import numpy as np
 
 from repro.sim.engine import SimConfig, SimulationEngine
+from repro.sim.executors import EXECUTORS
 from repro.sim.scenarios import SCENARIOS
 
 
@@ -22,8 +24,11 @@ def build_parser() -> argparse.ArgumentParser:
         description="Time-evolving decentralized ST-LF network simulator")
     p.add_argument("--scenario", default="channel-drift",
                    choices=sorted(SCENARIOS))
+    p.add_argument("--engine", default="sync", choices=sorted(EXECUTORS),
+                   help="execution mode (see repro.sim.executors)")
     p.add_argument("--devices", type=int, default=8)
-    p.add_argument("--rounds", type=int, default=5)
+    p.add_argument("--rounds", type=int, default=5,
+                   help="global rounds (sync) / ticks (async-gossip)")
     p.add_argument("--seed", type=int, default=0)
     p.add_argument("--setting", default="M//MM",
                    help="dataset manipulation (see data.build_network)")
@@ -31,29 +36,64 @@ def build_parser() -> argparse.ArgumentParser:
                    help="samples per device")
     p.add_argument("--train-iters", type=int, default=30,
                    help="local SGD iterations per round")
+    p.add_argument("--div-tau", type=int, default=1,
+                   help="Algorithm-1 exchange rounds per estimate")
+    p.add_argument("--div-T", type=int, default=8,
+                   help="Algorithm-1 local iterations per exchange")
+    p.add_argument("--batch", type=int, default=10)
+    p.add_argument("--lr", type=float, default=0.01)
     p.add_argument("--threshold", type=float, default=0.05,
                    help="drift threshold that triggers a re-solve")
+    p.add_argument("--link-thresh", type=float, default=1e-3,
+                   help="alpha weight above which a link counts active")
+    p.add_argument("--no-reseed", action="store_true",
+                   help="disable churn-robust re-seeding of (re)joining "
+                        "devices from the current best source mixture")
     p.add_argument("--solver-max-outer", type=int, default=8)
     p.add_argument("--solver-inner-steps", type=int, default=600)
+    # async-gossip knobs
+    p.add_argument("--tick-periods", default="1,2,4",
+                   help="comma-separated local clock periods devices "
+                        "sample from (async-gossip)")
+    p.add_argument("--gossip-pairs", type=int, default=-1,
+                   help="gossip meetings per tick; -1: n_active//4")
+    p.add_argument("--gossip-mix", type=float, default=0.5,
+                   help="blend step of a gossip model exchange")
+    p.add_argument("--resolve-patience", type=int, default=10,
+                   help="staleness bound in ticks that forces a warm "
+                        "re-solve (async-gossip; <=0 disables)")
+    p.add_argument("--div-prior", type=float, default=1.0,
+                   help="solver-input divergence for never-estimated "
+                        "pairs (async measures lazily; <=0 disables)")
     p.add_argument("--out", default=None,
-                   help="JSONL metrics path (default: "
-                        "results/sim/<scenario>-n<devices>-r<rounds>.jsonl)")
+                   help="JSONL metrics path (default: results/sim/"
+                        "<scenario>[-<engine>]-n<devices>-r<rounds>"
+                        ".jsonl)")
     p.add_argument("--quiet", action="store_true")
     return p
 
 
 def main(argv=None) -> int:
     args = build_parser().parse_args(argv)
+    tag = "" if args.engine == "sync" else f"-{args.engine}"
     out = args.out or os.path.join(
         "results", "sim",
-        f"{args.scenario}-n{args.devices}-r{args.rounds}.jsonl")
+        f"{args.scenario}{tag}-n{args.devices}-r{args.rounds}.jsonl")
     cfg = SimConfig(
-        scenario=args.scenario, devices=args.devices, rounds=args.rounds,
-        seed=args.seed, setting=args.setting,
+        scenario=args.scenario, engine=args.engine, devices=args.devices,
+        rounds=args.rounds, seed=args.seed, setting=args.setting,
         samples_per_device=args.samples, train_iters=args.train_iters,
-        resolve_threshold=args.threshold,
+        div_tau=args.div_tau, div_T=args.div_T, batch=args.batch,
+        lr=args.lr, resolve_threshold=args.threshold,
+        link_thresh=args.link_thresh,
+        reseed_on_rejoin=not args.no_reseed,
         solver_max_outer=args.solver_max_outer,
         solver_inner_steps=args.solver_inner_steps,
+        tick_periods=tuple(int(x) for x in
+                           args.tick_periods.split(",") if x.strip()),
+        gossip_pairs=args.gossip_pairs, gossip_mix=args.gossip_mix,
+        resolve_patience=args.resolve_patience,
+        div_prior=args.div_prior,
         log_path=out, verbose=not args.quiet)
     engine = SimulationEngine(cfg)
     rows = engine.run()
@@ -63,12 +103,24 @@ def main(argv=None) -> int:
     cold_iters = [r["solver_iters"] for r in resolves if not r["warm"]]
     tgt = [r["mean_target_acc"] for r in rows
            if np.isfinite(r["mean_target_acc"])]
-    print(f"\n[sim] {args.scenario}: {len(rows)} rounds, "
+    print(f"\n[sim] {args.scenario} ({args.engine}): {len(rows)} rounds, "
           f"{len(resolves)} re-solves "
           f"({len(warm_iters)} warm, mean "
           f"{np.mean(warm_iters) if warm_iters else 0:.1f} outer iters; "
           f"{len(cold_iters)} cold, mean "
           f"{np.mean(cold_iters) if cold_iters else 0:.1f})")
+    if args.engine == "async-gossip":
+        trained = sum(r["n_trained"] for r in rows)
+        meetings = sum(len(r["gossip"] or []) for r in rows)
+        stale_resolves = sum(r["resolve_reason"] == "staleness"
+                             for r in rows)
+        stale_mean = np.mean([r["mean_staleness"] for r in rows]) \
+            if rows else 0.0
+        print(f"[sim] async: {trained} device-steps over {len(rows)} "
+              f"ticks ({trained / max(len(rows), 1):.1f}/tick), "
+              f"{meetings} gossip meetings, "
+              f"{stale_resolves} staleness-triggered re-solves, "
+              f"mean staleness {stale_mean:.2f}")
     if tgt:
         print(f"[sim] target accuracy: first={tgt[0]:.3f} "
               f"last={tgt[-1]:.3f}; total energy "

@@ -11,6 +11,17 @@ Registered scenarios:
                 re-decided whenever membership changes
   label-arrival unlabeled devices gradually gain labels, flipping targets
                 into sources as their empirical error drops
+  async-gossip  clock-drift control for the async executor: device tick
+                periods are occasionally re-drawn; no data/channel change
+  stragglers    a fixed fraction of devices runs on a much slower clock;
+                the straggler set slowly rotates
+
+The clock scenarios mutate device tick rates through
+``engine.set_tick_period`` and are only meaningful under
+``--engine async-gossip`` (under sync there are no clocks and they
+degenerate to ``static``).  Scenarios that need to see the initial state
+(e.g. to designate stragglers) override ``setup``, called once after the
+engine and its executor are constructed.
 """
 from __future__ import annotations
 
@@ -46,6 +57,9 @@ class Scenario:
     def __init__(self, cfg, rng: np.random.Generator):
         self.cfg = cfg
         self.rng = rng
+
+    def setup(self, engine):
+        """One-time hook after engine/executor construction."""
 
     def step(self, engine, t: int) -> List[dict]:
         return []
@@ -99,6 +113,82 @@ class DeviceChurn(Scenario):
             join = int(inactive[self.rng.integers(len(inactive))])
             engine.set_active(join, True)
             events.append({"event": "join", "device": join})
+        return events
+
+
+@register("async-gossip")
+class AsyncGossip(Scenario):
+    """Clock-drift control for the async-gossip executor: no exogenous
+    data or channel mutation, but with probability ``retick_p`` per tick
+    one active device's clock period is re-drawn from the configured
+    period set — devices speed up and slow down over the run."""
+
+    def __init__(self, cfg, rng):
+        super().__init__(cfg, rng)
+        self.p = getattr(cfg, "retick_p", 0.1)
+
+    def step(self, engine, t):
+        st = engine.state
+        r = self.rng.random()           # drawn unconditionally: the rng
+        if st.clocks is None or r >= self.p:   # stream is engine-agnostic
+            return []
+        a = st.active_idx
+        dev = int(a[self.rng.integers(len(a))])
+        period = int(self.rng.choice(
+            np.asarray(list(self.cfg.tick_periods), int)))
+        engine.set_tick_period(dev, period)
+        return [{"event": "retick", "device": dev, "period": period}]
+
+
+@register("stragglers")
+class Stragglers(Scenario):
+    """A fixed fraction of devices runs on a much slower clock (the
+    straggler/participation regime of async FL); occasionally one
+    straggler recovers and a previously-fast device starts straggling,
+    so the slow set rotates without changing its size."""
+
+    def __init__(self, cfg, rng):
+        super().__init__(cfg, rng)
+        self.frac = getattr(cfg, "straggler_frac", 0.25)
+        self.period = getattr(cfg, "straggler_period", 8)
+        self.p_swap = getattr(cfg, "straggler_p_swap", 0.1)
+        self.stragglers: set = set()
+        self._orig_period: dict = {}     # sampled period, restored on recovery
+
+    def _straggle(self, engine, device: int):
+        self.stragglers.add(device)
+        self._orig_period[device] = int(engine.state.clocks.period[device])
+        engine.set_tick_period(device, self.period)
+
+    def setup(self, engine):
+        st = engine.state
+        if st.clocks is None:
+            return
+        a = st.active_idx
+        k = max(1, int(round(self.frac * len(a))))
+        for i in sorted(int(i) for i in
+                        self.rng.choice(a, size=k, replace=False)):
+            self._straggle(engine, i)
+
+    def step(self, engine, t):
+        st = engine.state
+        events: List[dict] = []
+        if st.clocks is None:
+            return events
+        if self.rng.random() < self.p_swap and self.stragglers:
+            back = int(self.rng.choice(sorted(self.stragglers)))
+            self.stragglers.remove(back)
+            restored = self._orig_period.pop(back, 1)
+            engine.set_tick_period(back, restored)
+            events.append({"event": "recover", "device": back,
+                           "period": restored})
+            fast = [int(i) for i in st.active_idx
+                    if int(i) not in self.stragglers and int(i) != back]
+            if fast:
+                slow = fast[self.rng.integers(len(fast))]
+                self._straggle(engine, slow)
+                events.append({"event": "straggle", "device": slow,
+                               "period": self.period})
         return events
 
 

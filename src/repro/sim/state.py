@@ -17,6 +17,7 @@ from repro.core.energy import EnergyModel
 from repro.core.solver import SolverResult
 from repro.data.partition import DeviceData
 from repro.fl.client import StackedClients
+from repro.sim.clock import DeviceClocks
 
 
 @dataclasses.dataclass
@@ -36,6 +37,8 @@ class NetworkState:
     alpha: np.ndarray               # (P, P)
     solver: Optional[SolverResult] = None
     solve_active: Optional[np.ndarray] = None   # active idx at last solve
+    #: heterogeneous local clocks (async-gossip executor; None under sync)
+    clocks: Optional[DeviceClocks] = None
     # measurement snapshot at the last solve (drift reference)
     ref_K: Optional[np.ndarray] = None
     ref_eps: Optional[np.ndarray] = None

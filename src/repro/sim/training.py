@@ -24,8 +24,8 @@ from repro.fl.client import (StackedClients, empirical_errors,
 
 
 @functools.partial(jax.jit, static_argnames=("iters", "batch", "lr"))
-def network_step(params, clients: StackedClients, key, active, *,
-                 iters: int, batch: int, lr: float):
+def network_step(params, clients: StackedClients, key, active,
+                 train_mask=None, *, iters: int, batch: int, lr: float):
     """One simulator round of local training for every device at once.
 
     ``active``: (N,) bool — devices currently in the network.  Departed
@@ -33,9 +33,18 @@ def network_step(params, clients: StackedClients, key, active, *,
     until they rejoin.  (The SGD itself still runs for every pool slot —
     shapes stay static across churn — only its result is discarded.)
 
+    ``train_mask``: optional (N,) bool — the async-gossip executor's
+    clock-eligibility subset.  Devices outside it keep their params this
+    tick; the call stays ONE jitted computation (the masked lanes still
+    run and are discarded — free under SPMD on a pod, and the price of a
+    static shape on one host).  ``None`` (the sync engine) trains every
+    active device and compiles to the same graph as before the mask
+    existed.
+
     Returns (params', eps_hat, own_acc):
-      params'  — updated stacked params; inactive devices and devices
-                 without labeled data are left untouched
+      params'  — updated stacked params; inactive devices, devices
+                 without labeled data, and devices outside train_mask
+                 are left untouched
       eps_hat  — empirical errors (unlabeled counted as 1), shape (N,)
       own_acc  — ground-truth accuracy of each device's own params, (N,)
     """
@@ -44,6 +53,8 @@ def network_step(params, clients: StackedClients, key, active, *,
                             iters=iters, batch=batch, lr=lr)
     update = jnp.logical_and(jnp.any(clients.labeled, axis=1),
                              jnp.asarray(active))           # (N,)
+    if train_mask is not None:
+        update = jnp.logical_and(update, jnp.asarray(train_mask))
 
     def keep(new, old):
         m = update.reshape((-1,) + (1,) * (new.ndim - 1))
