@@ -12,7 +12,7 @@ import traceback
 from benchmarks.common import save_rows
 
 BENCHES = ["fig4", "fig5", "fig6", "fig8", "fig9", "table2", "roofline",
-           "sim_warmstart", "sim_async", "solver_scaling"]
+           "sim_warmstart", "sim_async", "sim_scale", "solver_scaling"]
 
 
 def _module(name: str):
@@ -27,6 +27,7 @@ def _module(name: str):
         "roofline": "benchmarks.roofline_table",
         "sim_warmstart": "benchmarks.sim_warmstart",
         "sim_async": "benchmarks.sim_async",
+        "sim_scale": "benchmarks.sim_scale",
         "solver_scaling": "benchmarks.solver_scaling",
     }[name]
     return importlib.import_module(mod)

@@ -23,6 +23,26 @@ python -m repro.sim.run --engine async-gossip --scenario stragglers \
     --solver-max-outer 3 --solver-inner-steps 200 --resolve-patience 3 \
     --quiet --out "${REPRO_SIM_LOG_ASYNC:-results/sim/ci_async_smoke.jsonl}"
 
+# emulated-mesh smoke gate: the sharded device pool on 8 forced
+# host-platform devices (XLA_FLAGS must precede the first jax import,
+# hence fresh processes), both engines end-to-end through the CLI, then
+# the sim_scale parity gate (local pool vs 8-shard pool field-for-field)
+MESH_FLAGS="--xla_force_host_platform_device_count=8"
+XLA_FLAGS="$MESH_FLAGS${XLA_FLAGS:+ $XLA_FLAGS}" \
+python -m repro.sim.run --mesh 8 --scenario static --devices 8 \
+    --rounds 2 --samples 40 --train-iters 8 --div-T 6 \
+    --solver-max-outer 3 --solver-inner-steps 200 \
+    --quiet --out "results/sim/ci_mesh_sync.jsonl"
+XLA_FLAGS="$MESH_FLAGS${XLA_FLAGS:+ $XLA_FLAGS}" \
+python -m repro.sim.run --mesh 8 --engine async-gossip \
+    --scenario async-gossip --devices 8 --rounds 3 --samples 40 \
+    --train-iters 8 --div-T 6 --solver-max-outer 3 \
+    --solver-inner-steps 200 --resolve-patience 3 \
+    --gossip-topology ring \
+    --quiet --out "results/sim/ci_mesh_async.jsonl"
+XLA_FLAGS="$MESH_FLAGS${XLA_FLAGS:+ $XLA_FLAGS}" \
+python -m benchmarks.sim_scale --ci
+
 # sync determinism gate: same seed twice -> identical deterministic fields
 # (golden-file parity vs the pre-refactor engine runs in the pytest suite)
 python - <<'PY'

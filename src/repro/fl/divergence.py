@@ -33,9 +33,14 @@ def _binary_loss(params, x, y):
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "T", "batch", "lr"))
-def _pairwise_divergence(h0, clients: StackedClients, pair_i, pair_j, key,
-                         *, tau: int, T: int, batch: int, lr: float):
-    """h0: single init param tree (shared h').  pair_i/j: (P,) int32."""
+def pairwise_divergence_values(h0, clients: StackedClients, pair_i, pair_j,
+                               keys, *, tau: int, T: int, batch: int,
+                               lr: float):
+    """h0: single init param tree (shared h').  pair_i/j: (P,) int32;
+    ``keys``: per-pair PRNG keys, (P, key_dim) — see ``pair_keys``.  Each
+    pair's estimate depends only on its own (i, j, key) lane, so callers
+    are free to re-chunk or shard the pair axis (the mesh-sharded pool
+    does exactly that) without changing any value."""
     n_dev, n_max = clients.x.shape[0], clients.x.shape[1]
     flat_x = jnp.reshape(clients.x, (n_dev * n_max,) + clients.x.shape[2:])
 
@@ -85,13 +90,71 @@ def _pairwise_divergence(h0, clients: StackedClients, pair_i, pair_j, key,
         eps = (wi + wj) / jnp.maximum(ni + nj, 1.0)
         return jnp.clip(2.0 * (1.0 - 2.0 * eps), 0.0, 2.0)
 
-    keys = jax.random.split(key, pair_i.shape[0])
     return jax.vmap(one_pair)(pair_i, pair_j, keys)
+
+
+def pair_keys(key, npairs: int, pair_chunk: int = 256):
+    """The per-pair PRNG keys of the local chunked estimator, as one
+    (npairs, key_dim) array: chunk c draws ``split(fold_in(key, c0),
+    pair_chunk)`` (a single call draws ``split(key, npairs)``), and pair
+    p's key is its lane of its chunk's split.  Shared by the local and
+    mesh-sharded estimation paths so a re-chunked/sharded run reproduces
+    the local values bit-for-bit."""
+    if npairs <= pair_chunk:
+        return jax.random.split(key, npairs)
+    out = [jax.random.split(jax.random.fold_in(key, c0), pair_chunk)
+           for c0 in range(0, npairs, pair_chunk)]
+    return jnp.concatenate(out)[:npairs]
+
+
+def chunked_pair_lanes(pi, pj, keys, width: int, call, *,
+                       pad_partial: bool) -> np.ndarray:
+    """Drive ``call(ci, cj, ck) -> (width or fewer,) values`` over
+    fixed-width chunks of the pair axis, padding short chunks with
+    repeats of their first lane (outputs discarded) so one compilation
+    serves every chunk.  The single chunk/pad/truncate implementation
+    behind BOTH pair-estimation backends — the local chunk loop and the
+    sharded pool's mesh-width chunks — so the key/pad conventions the
+    bit-for-bit parity guarantee rests on cannot drift apart.
+
+    ``pad_partial``: True pads even a lone short chunk (the sharded pool
+    must divide its lanes over the mesh); False keeps the historical
+    local behavior of compiling a small batch at its natural size."""
+    npairs = len(pi)
+    out = np.zeros(npairs)
+    for c0 in range(0, npairs, width):
+        ci = pi[c0:c0 + width]
+        cj = pj[c0:c0 + width]
+        ck = keys[c0:c0 + width]
+        pad = (width - len(ci)) if (pad_partial or npairs > width) else 0
+        if pad:
+            ci = np.concatenate([ci, np.full(pad, ci[0])])
+            cj = np.concatenate([cj, np.full(pad, cj[0])])
+            ck = jnp.concatenate([ck, jnp.broadcast_to(
+                ck[0], (pad,) + ck.shape[1:])])
+        vals = np.asarray(call(ci, cj, ck))
+        out[c0:c0 + width - pad] = vals[:width - pad]
+    return out
+
+
+def _chunked_pair_values(h0, clients: StackedClients, pi, pj, keys, *,
+                         tau: int, T: int, batch: int, lr: float,
+                         pair_chunk: int) -> np.ndarray:
+    """Local (single-host) pair estimation: one vmapped call for small
+    batches, fixed-width padded chunks beyond ``pair_chunk``."""
+    def call(ci, cj, ck):
+        return pairwise_divergence_values(
+            h0, clients, jnp.asarray(ci), jnp.asarray(cj), ck,
+            tau=tau, T=T, batch=batch, lr=lr)
+
+    return chunked_pair_lanes(pi, pj, keys, pair_chunk, call,
+                              pad_partial=False)
 
 
 def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
                          T: int = 25, batch: int = 10, lr: float = 0.01,
-                         pairs=None, pair_chunk: int = 256) -> np.ndarray:
+                         pairs=None, pair_chunk: int = 256,
+                         values_fn=None) -> np.ndarray:
     """Algorithm 1: returns the symmetric (N, N) matrix of empirical
     d_H estimates (diagonal 0).
 
@@ -104,7 +167,14 @@ def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
 
     ``pair_chunk``: large networks vmap thousands of pair-classifiers;
     chunking bounds the stacked-parameter working set (chunks are padded
-    to a fixed width so one compilation serves every full chunk)."""
+    to a fixed width so one compilation serves every full chunk).
+
+    ``values_fn``: optional executor for the per-pair values,
+    ``fn(h0, clients, pi, pj, keys, tau=, T=, batch=, lr=) -> (npairs,)``
+    — the hook the mesh-sharded device pool uses to run the same pair
+    lanes under shard_map.  The key schedule (``pair_keys``) and the
+    canonicalized pair order are fixed HERE, so any backend that keeps
+    per-pair lanes intact reproduces the local values bit-for-bit."""
     n = clients.n_devices
     if pairs is None:
         pi, pj = np.triu_indices(n, k=1)
@@ -116,27 +186,14 @@ def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
             np.maximum(pairs[:, 0], pairs[:, 1])
     key, init_key = jax.random.split(key)
     h0 = cnn.cnn_init(init_key, num_classes=2)
+    keys = pair_keys(key, len(pi), pair_chunk)
 
-    npairs = len(pi)
-    d = np.zeros(npairs)
-    if npairs <= pair_chunk:
-        d[:] = np.asarray(_pairwise_divergence(
-            h0, clients, jnp.asarray(pi), jnp.asarray(pj), key,
-            tau=tau, T=T, batch=batch, lr=lr))
+    if values_fn is not None:
+        d = np.asarray(values_fn(h0, clients, pi, pj, keys,
+                                 tau=tau, T=T, batch=batch, lr=lr))
     else:
-        for c0 in range(0, npairs, pair_chunk):
-            ck = jax.random.fold_in(key, c0)
-            ci = pi[c0:c0 + pair_chunk]
-            cj = pj[c0:c0 + pair_chunk]
-            pad = pair_chunk - len(ci)
-            if pad:                      # pad w/ repeats: one compile shape
-                ci = np.concatenate([ci, np.full(pad, ci[0])])
-                cj = np.concatenate([cj, np.full(pad, cj[0])])
-            dc = np.asarray(_pairwise_divergence(
-                h0, clients, jnp.asarray(ci), jnp.asarray(cj), ck,
-                tau=tau, T=T, batch=batch, lr=lr))
-            d[c0:c0 + pair_chunk] = dc[:pair_chunk - pad] if pad \
-                else dc
+        d = _chunked_pair_values(h0, clients, pi, pj, keys, tau=tau, T=T,
+                                 batch=batch, lr=lr, pair_chunk=pair_chunk)
     out = np.zeros((n, n))
     out[pi, pj] = d
     out[pj, pi] = d
@@ -145,7 +202,8 @@ def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
 
 def update_divergences(div: np.ndarray, clients: StackedClients, key,
                        pairs, *, tau: int = 4, T: int = 25, batch: int = 10,
-                       lr: float = 0.01, ema=0.0) -> np.ndarray:
+                       lr: float = 0.01, ema=0.0,
+                       values_fn=None) -> np.ndarray:
     """Incrementally refresh ``div`` on the given (P, 2) pairs only and
     return the merged copy (Algorithm 1 run just for the dirty links).
 
@@ -155,13 +213,16 @@ def update_divergences(div: np.ndarray, clients: StackedClients, key,
     whose link was estimated before, so repeated gossip meetings average
     the Algorithm-1 estimator's sampling noise instead of churning the
     solver input (and 0 for never-estimated pairs, which have no old
-    value to keep)."""
+    value to keep).
+
+    ``values_fn`` is forwarded to ``estimate_divergences`` (the sharded
+    device pool's execution hook)."""
     pairs = np.atleast_2d(np.asarray(pairs, np.int32))
     out = np.array(div, float, copy=True)
     if pairs.size == 0:
         return out
     fresh = estimate_divergences(clients, key, tau=tau, T=T, batch=batch,
-                                 lr=lr, pairs=pairs)
+                                 lr=lr, pairs=pairs, values_fn=values_fn)
     pi, pj = pairs[:, 0], pairs[:, 1]        # vectorized symmetric scatter
     w = np.broadcast_to(np.asarray(ema, float), pi.shape)
     out[pi, pj] = w * out[pi, pj] + (1.0 - w) * fresh[pi, pj]

@@ -21,6 +21,20 @@ def alpha_combine(theta, alpha, *, interpret: Optional[bool] = None):
     return alpha_combine_flat(theta, alpha, interpret=interpret)
 
 
+def alpha_combine_slab(theta, alpha_cols, *,
+                       interpret: Optional[bool] = None):
+    """Per-shard transfer slab: the FULL flattened source stack against a
+    local block of target columns.  theta: (S, P); alpha_cols: (S, T_loc)
+    -> (T_loc, P).  This is the mesh-sharded pool's transfer hot path —
+    each shard all-gathers theta once and streams it through the kernel
+    for just its own target columns, so every source's parameters cross
+    the interconnect once regardless of how many shards consume them."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return alpha_combine_flat(theta, jnp.asarray(alpha_cols, jnp.float32),
+                              interpret=interpret)
+
+
 def alpha_combine_tree(params_stack, alpha, *,
                        interpret: Optional[bool] = None):
     """Pytree with leading device axis -> same pytree, mixed columns."""

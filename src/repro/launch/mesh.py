@@ -37,8 +37,21 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, devices=devs[:need])
 
 
-def make_local_mesh(model_axis: Optional[int] = None):
-    """Whatever the host actually has — for smoke tests and examples."""
-    n = len(jax.devices())
+def make_local_mesh(model_axis: Optional[int] = None, *,
+                    axis_names: Tuple[str, str] = ("data", "model"),
+                    max_devices: Optional[int] = None):
+    """Whatever the host actually has — for smoke tests and examples.
+
+    Tolerates emulated host platforms with many devices
+    (``--xla_force_host_platform_device_count=N``): ``max_devices`` caps
+    how many are meshed (default: all of them), and ``axis_names``
+    renames the two axes — the sim's sharded device pool builds its
+    1-wide-model ('devices', ...) mesh through here instead of growing a
+    second local-mesh factory."""
+    devs = jax.devices()
+    n = len(devs) if max_devices is None else min(max_devices, len(devs))
     m = model_axis or 1
-    return jax.make_mesh((n // m, m), ("data", "model"))
+    if n < m:
+        raise RuntimeError(f"model_axis={m} needs {m} devices, found {n}")
+    n = (n // m) * m                    # drop any remainder (historical)
+    return jax.make_mesh((n // m, m), axis_names, devices=devs[:n])

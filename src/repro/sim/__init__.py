@@ -9,11 +9,15 @@ solution — only when the measured drift exceeds a threshold.
 
 Execution modes (repro.sim.executors): the classic synchronous round
 pipeline (``sync``) and event-driven ticks with heterogeneous device
-clocks + random pairwise gossip (``async-gossip``).
+clocks + random pairwise gossip (``async-gossip``).  Either executor's
+heavy array phases run on a device-pool backend (repro.sim.shard):
+single host by default, or the pool axis sharded over a jax 'devices'
+mesh (``SimConfig.mesh`` / ``--mesh``) — trajectory-preserving.
 
 Entry points:
   python -m repro.sim.run --scenario channel-drift --devices 64 --rounds 20
   python -m repro.sim.run --engine async-gossip --scenario stragglers ...
+  python -m repro.sim.run --mesh 8 --scenario static --devices 256 ...
   SimulationEngine(SimConfig(...)).run()
 """
 from repro.sim.clock import DeviceClocks  # noqa: F401
@@ -21,4 +25,5 @@ from repro.sim.engine import SimConfig, SimulationEngine  # noqa: F401
 from repro.sim.executors import EXECUTORS, get_executor  # noqa: F401
 from repro.sim.metrics import MetricsLogger, read_jsonl  # noqa: F401
 from repro.sim.scenarios import SCENARIOS, get_scenario  # noqa: F401
+from repro.sim.shard import DevicePool, make_pool  # noqa: F401
 from repro.sim.state import NetworkState  # noqa: F401

@@ -6,7 +6,11 @@ round pipeline (scenario mutation -> batched training -> divergence
 refresh -> drift-gated re-solve -> transfer/eval/metrics), and
 ``AsyncGossipExecutor`` runs event-driven ticks where devices progress
 on heterogeneous local clocks and exchange over random gossip pairs.
-The engine itself owns what both share:
+WHERE the heavy array phases of either executor run is a third layer,
+the device pool (repro.sim.shard.pool): single host by default, or the
+pool axis sharded over a jax 'devices' mesh (``SimConfig.mesh``) —
+trajectory-preserving either way.  The engine itself owns what all of
+them share:
 
   - NetworkState construction (fixed-size pool, spares for churn)
   - the scenario mutation API (drift_channels / set_active /
@@ -37,6 +41,7 @@ from repro.fl.transfer import column_normalize
 from repro.sim.executors import get_executor
 from repro.sim.metrics import MetricsLogger
 from repro.sim.scenarios import get_scenario
+from repro.sim.shard.pool import make_pool
 from repro.sim.state import NetworkState
 
 
@@ -51,6 +56,16 @@ class SimConfig:
     spares: int = -1             # -1: let the scenario choose
     # execution layer (repro.sim.executors)
     engine: str = "sync"
+    # device-pool backend (repro.sim.shard.pool): 0 = single-host
+    # LocalPool (the bit-for-bit historical path); k >= 1 = ShardedPool
+    # with the pool axis over a k-shard 'devices' mesh (k=1 runs the full
+    # sharded pipeline on one device — parity-testable anywhere; k>1
+    # needs that many local/emulated jax devices)
+    mesh: int = 0
+    #: async subset-gather training (LocalPool): gather the eligible
+    #: lanes into a compact batch instead of masked no-op SGD over the
+    #: whole pool; False keeps the masked path (the parity reference)
+    train_gather: bool = True
     #: alpha weight above which a link counts as active (transmissions,
     #: link_churn, and the async gossip exchanges all use this)
     link_thresh: float = 1e-3
@@ -84,6 +99,13 @@ class SimConfig:
     tick_periods: Tuple[int, ...] = (1, 2, 4)
     #: gossip meetings per tick; -1: n_active // 4 (at least 1)
     gossip_pairs: int = -1
+    #: who meets whom (async-gossip executor): 'uniform' random disjoint
+    #: pairs (historical), 'ring' — adjacent edges of a seeded ring over
+    #: the pool, or 'k-regular' — random disjoint edges of a seeded
+    #: circulant graph of degree ``gossip_degree``
+    gossip_topology: str = "uniform"
+    #: neighbor degree of the 'k-regular' topology (rounded down to even)
+    gossip_degree: int = 4
     #: blend step size of a gossip model exchange (scales the solved
     #: alpha weight of the link)
     gossip_mix: float = 0.5
@@ -150,6 +172,7 @@ class SimulationEngine:
         self._prev_links: set = set()
         self._energy_cum = 0.0
         self._solve_tick = -1
+        self.pool = make_pool(self)
         self.executor = get_executor(cfg.engine)(self)
         self.executor.setup()
         self.scenario.setup(self)

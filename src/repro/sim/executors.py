@@ -31,6 +31,11 @@ refresh for devices that actually ticked, so the solver sees exactly the
 information a decentralized deployment would have.  Algorithm-1 gossip
 traffic is unpriced, matching the sync engine; the energy/transmissions
 metrics price the model exchanges of the tick.
+
+Neither executor touches arrays directly for the heavy phases: training,
+divergence estimation, the mixture transfer and the accuracy sweep all
+go through ``engine.pool`` (repro.sim.shard.pool), so the same control
+flow runs single-host or sharded over a device mesh unchanged.
 """
 from __future__ import annotations
 
@@ -42,11 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.client import stack_clients
-from repro.fl.divergence import update_divergences
-from repro.fl.transfer import apply_transfer
 from repro.sim.clock import DeviceClocks
 from repro.sim.metrics import RoundRecord
-from repro.sim.training import mixed_accuracies, network_step
 
 if TYPE_CHECKING:                                   # no import cycle
     from repro.sim.engine import SimulationEngine
@@ -185,11 +187,10 @@ class SyncExecutor(Executor):
         st, cfg = eng.state, eng.cfg
         t0, events = self._begin(t)
 
-        # 2. batched train + measure (one compiled call over the pool)
+        # 2. batched train + measure (one compiled call per pool shard)
         k_round = jax.random.fold_in(eng.key, t)
-        st.params, eps, acc = network_step(
-            st.params, st.clients, k_round, jnp.asarray(st.active),
-            iters=cfg.train_iters, batch=cfg.batch, lr=cfg.lr)
+        st.params, eps, acc = eng.pool.train(st.params, st.clients,
+                                             k_round, st.active)
         st.eps_hat = np.asarray(eps, float)
         st.own_acc = np.asarray(acc, float)
 
@@ -197,9 +198,8 @@ class SyncExecutor(Executor):
         pairs = st.unknown_active_pairs()
         if len(pairs):
             k_div = jax.random.fold_in(k_round, 1)
-            st.div_hat = update_divergences(
-                st.div_hat, st.clients, k_div, pairs, tau=cfg.div_tau,
-                T=cfg.div_T, batch=cfg.batch, lr=cfg.lr)
+            st.div_hat = eng.pool.update_divergences(
+                st.div_hat, st.clients, k_div, pairs)
             for i, j in pairs:
                 st.div_known[i, j] = st.div_known[j, i] = True
 
@@ -213,10 +213,10 @@ class SyncExecutor(Executor):
             warm, solver_iters, solver_wall = self._run_solve(a, t)
 
         # 5. transfer + evaluation
-        mixed = apply_transfer(st.params, jnp.asarray(st.alpha),
-                               jnp.asarray(st.psi))
+        mixed = eng.pool.transfer(st.params, st.alpha, st.psi)
         st.params = mixed                        # targets adopt mixtures
-        acc_mixed = np.asarray(mixed_accuracies(mixed, st.clients), float)
+        acc_mixed = np.asarray(eng.pool.accuracies(mixed, st.clients),
+                               float)
 
         churn = self._link_churn()
         row, record = self._emit(
@@ -227,8 +227,7 @@ class SyncExecutor(Executor):
             transmissions=st.energy.transmissions(
                 st.alpha, thresh=cfg.link_thresh),
             churn=churn, solve_age=solve_age, reason=reason,
-            n_trained=int(np.sum(np.asarray(
-                jnp.any(st.clients.labeled, axis=1))[a])))
+            n_trained=int(np.sum(st.labeled_devices[a])))
         if cfg.verbose:
             print(f"[sim] round {t}: active={len(a)} "
                   f"src={record.n_sources} tgt={record.n_targets} "
@@ -252,22 +251,66 @@ class AsyncGossipExecutor(Executor):
         self.gossip_rng = np.random.default_rng(cfg.seed + 3)
         eng.state.clocks = DeviceClocks.sample(
             eng.state.pool_size, cfg.tick_periods, self.clock_rng)
+        if cfg.gossip_topology not in ("uniform", "ring", "k-regular"):
+            raise ValueError(
+                f"unknown gossip_topology {cfg.gossip_topology!r}; "
+                "available: uniform, ring, k-regular")
+        # structured topologies live on a seeded ring over POOL slots, so
+        # the neighborhood structure is stable under churn; the ring is
+        # drawn from a dedicated stream so 'uniform' runs keep the
+        # historical gossip_rng trajectory untouched
+        self._ring = np.random.default_rng(cfg.seed + 4).permutation(
+            eng.state.pool_size)
 
     # ------------------------------------------------------------- gossip
     def _select_pairs(self, active_idx: np.ndarray) -> List[Tuple[int, int]]:
-        """Disjoint random pairs among the active devices.  The pair
-        count is held constant across ticks (``gossip_pairs``, default
-        n_active // 4) so the vmapped pair-divergence kernel compiles
-        once; when the active set is too small the count shrinks to
-        n_active // 2."""
+        """Disjoint gossip meetings among the active devices, drawn from
+        ``cfg.gossip_topology``:
+
+        ``uniform``    random disjoint pairs (the historical default)
+        ``ring``       a block of adjacent edges of the seeded ring,
+                       restricted to active devices, starting at a
+                       random offset each tick
+        ``k-regular``  random disjoint edges of the seeded circulant
+                       graph (ring neighbors at hops 1..degree/2)
+
+        The pair count is held constant across ticks (``gossip_pairs``,
+        default n_active // 4) so the vmapped pair-divergence kernel
+        compiles once; when the active set is too small the count
+        shrinks to n_active // 2."""
         cfg = self.engine.cfg
         g = cfg.gossip_pairs if cfg.gossip_pairs > 0 \
             else max(len(active_idx) // 4, 1)
         g = min(g, len(active_idx) // 2)
         if g < 1:
             return []
-        perm = self.gossip_rng.permutation(active_idx)
-        return [(int(perm[2 * k]), int(perm[2 * k + 1])) for k in range(g)]
+        if cfg.gossip_topology == "uniform":
+            perm = self.gossip_rng.permutation(active_idx)
+            return [(int(perm[2 * k]), int(perm[2 * k + 1]))
+                    for k in range(g)]
+        act = set(int(i) for i in active_idx)
+        ring = [int(d) for d in self._ring if int(d) in act]
+        n = len(ring)
+        if cfg.gossip_topology == "ring":
+            # g consecutive disjoint edges from a random starting offset
+            o = int(self.gossip_rng.integers(n))
+            return [(ring[(o + 2 * k) % n], ring[(o + 2 * k + 1) % n])
+                    for k in range(g)]
+        # k-regular: circulant edge set over the active ring
+        half = max(1, cfg.gossip_degree // 2)
+        edges = [(ring[i], ring[(i + d) % n])
+                 for d in range(1, half + 1) for i in range(n)
+                 if ring[i] != ring[(i + d) % n]]
+        pairs: List[Tuple[int, int]] = []
+        used: set = set()
+        for e in self.gossip_rng.permutation(len(edges)):
+            i, j = edges[int(e)]
+            if i not in used and j not in used:
+                pairs.append((i, j))
+                used.update((i, j))
+                if len(pairs) == g:
+                    break
+        return pairs
 
     def _gossip_divergences(self, pairs, k_round):
         """Pair-incremental Algorithm-1 refresh for this tick's meetings.
@@ -278,9 +321,8 @@ class AsyncGossipExecutor(Executor):
         pi, pj = parr[:, 0], parr[:, 1]
         ema = np.where(st.div_known[pi, pj], cfg.div_ema, 0.0)
         k_div = jax.random.fold_in(k_round, 1)
-        st.div_hat = update_divergences(
-            st.div_hat, st.clients, k_div, parr, tau=cfg.div_tau,
-            T=cfg.div_T, batch=cfg.batch, lr=cfg.lr, ema=ema)
+        st.div_hat = self.engine.pool.update_divergences(
+            st.div_hat, st.clients, k_div, parr, ema=ema)
         st.div_known[pi, pj] = st.div_known[pj, pi] = True
 
     def _gossip_models(self, pairs) -> Tuple[np.ndarray, int]:
@@ -323,23 +365,20 @@ class AsyncGossipExecutor(Executor):
         st, cfg = eng.state, eng.cfg
         t0, events = self._begin(t)
 
-        # 2. masked local training: only clock-eligible devices step
+        # 2. local training on the clock-eligible subset (the pool
+        # decides HOW: LocalPool gathers the eligible lanes into a
+        # compact batch, ShardedPool masks within each shard's block)
         elig = np.logical_and(st.active, st.clocks.eligible(t))
-        e_idx = np.flatnonzero(elig)
         k_round = jax.random.fold_in(eng.key, t)
-        st.params, eps, acc = network_step(
-            st.params, st.clients, k_round, jnp.asarray(st.active),
-            jnp.asarray(elig), iters=cfg.train_iters, batch=cfg.batch,
-            lr=cfg.lr)
         # measurements refresh only where a device actually ticked —
         # everyone else's view stays stale, as it would in deployment
-        st.eps_hat[e_idx] = np.asarray(eps, float)[e_idx]
-        st.own_acc[e_idx] = np.asarray(acc, float)[e_idx]
+        st.params, st.eps_hat, st.own_acc = eng.pool.train_async(
+            st.params, st.clients, k_round, st.active, elig,
+            st.eps_hat, st.own_acc)
         # but only devices with labeled data actually TRAIN on a tick
-        # (network_step's update mask); unlabeled devices progress
-        # through gossip alone and must read as stale until they do
-        labeled_dev = np.asarray(jnp.any(st.clients.labeled, axis=1))
-        t_idx = np.flatnonzero(np.logical_and(elig, labeled_dev))
+        # (the step's update mask); unlabeled devices progress through
+        # gossip alone and must read as stale until they do
+        t_idx = np.flatnonzero(np.logical_and(elig, st.labeled_devices))
         st.clocks.mark_trained(t_idx, t)
 
         # 3. gossip: pairwise divergence refresh + model exchange
@@ -360,7 +399,7 @@ class AsyncGossipExecutor(Executor):
 
         # 5. evaluation + metrics (no global transfer phase: targets
         # converge to their mixtures through the gossip exchanges above)
-        acc_now = np.asarray(mixed_accuracies(st.params, st.clients),
+        acc_now = np.asarray(eng.pool.accuracies(st.params, st.clients),
                              float)
         churn = self._link_churn()
         stale_dev = st.clocks.staleness(t)[a] if len(a) \
@@ -374,6 +413,7 @@ class AsyncGossipExecutor(Executor):
             solve_age=solve_age, reason=reason,
             n_trained=len(t_idx), trained=[int(i) for i in t_idx],
             gossip=[[int(i), int(j)] for i, j in pairs],
+            gossip_topology=cfg.gossip_topology,
             mean_staleness=float(stale_dev.mean()),
             max_staleness=float(stale_dev.max()))
         if cfg.verbose:

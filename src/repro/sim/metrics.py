@@ -37,6 +37,9 @@ their defaults under sync):
                           (null under sync)
   gossip           list?  async: [i, j] gossip meetings of this tick
                           (null under sync)
+  gossip_topology  str?   async: the meeting graph the pairs were drawn
+                          from — uniform | ring | k-regular (null under
+                          sync)
   mean_staleness   float  async: mean ticks since each active device
                           last trained (-1.0 under sync)
   max_staleness    float  async: max of the same (-1.0 under sync)
@@ -83,6 +86,7 @@ class RoundRecord:
     n_trained: int = -1
     trained: Optional[List[int]] = None
     gossip: Optional[List[List[int]]] = None
+    gossip_topology: Optional[str] = None
     mean_staleness: float = -1.0
     max_staleness: float = -1.0
     solve_age: int = -1

@@ -26,6 +26,12 @@ def build_parser() -> argparse.ArgumentParser:
                    choices=sorted(SCENARIOS))
     p.add_argument("--engine", default="sync", choices=sorted(EXECUTORS),
                    help="execution mode (see repro.sim.executors)")
+    p.add_argument("--mesh", type=int, default=0,
+                   help="device-pool backend: 0 = single host (default); "
+                        "k >= 1 = pool axis sharded over a k-shard "
+                        "'devices' mesh (k > 1 needs that many local "
+                        "jax devices, e.g. XLA_FLAGS=--xla_force_host_"
+                        "platform_device_count=k on CPU)")
     p.add_argument("--devices", type=int, default=8)
     p.add_argument("--rounds", type=int, default=5,
                    help="global rounds (sync) / ticks (async-gossip)")
@@ -57,6 +63,14 @@ def build_parser() -> argparse.ArgumentParser:
                         "sample from (async-gossip)")
     p.add_argument("--gossip-pairs", type=int, default=-1,
                    help="gossip meetings per tick; -1: n_active//4")
+    p.add_argument("--gossip-topology", default="uniform",
+                   choices=("uniform", "ring", "k-regular"),
+                   help="meeting graph the gossip pairs are drawn from")
+    p.add_argument("--gossip-degree", type=int, default=4,
+                   help="neighbor degree of the k-regular topology")
+    p.add_argument("--no-train-gather", action="store_true",
+                   help="async: keep the masked full-pool training step "
+                        "instead of gathering eligible lanes compactly")
     p.add_argument("--gossip-mix", type=float, default=0.5,
                    help="blend step of a gossip model exchange")
     p.add_argument("--resolve-patience", type=int, default=10,
@@ -92,8 +106,11 @@ def main(argv=None) -> int:
         tick_periods=tuple(int(x) for x in
                            args.tick_periods.split(",") if x.strip()),
         gossip_pairs=args.gossip_pairs, gossip_mix=args.gossip_mix,
+        gossip_topology=args.gossip_topology,
+        gossip_degree=args.gossip_degree,
         resolve_patience=args.resolve_patience,
         div_prior=args.div_prior,
+        mesh=args.mesh, train_gather=not args.no_train_gather,
         log_path=out, verbose=not args.quiet)
     engine = SimulationEngine(cfg)
     rows = engine.run()
@@ -103,7 +120,8 @@ def main(argv=None) -> int:
     cold_iters = [r["solver_iters"] for r in resolves if not r["warm"]]
     tgt = [r["mean_target_acc"] for r in rows
            if np.isfinite(r["mean_target_acc"])]
-    print(f"\n[sim] {args.scenario} ({args.engine}): {len(rows)} rounds, "
+    print(f"\n[sim] {args.scenario} ({args.engine}, "
+          f"pool={engine.pool.name}): {len(rows)} rounds, "
           f"{len(resolves)} re-solves "
           f"({len(warm_iters)} warm, mean "
           f"{np.mean(warm_iters) if warm_iters else 0:.1f} outer iters; "

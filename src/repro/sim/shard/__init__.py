@@ -1,0 +1,16 @@
+"""Sharded device-pool subsystem: the sim's device axis over a jax mesh.
+
+Layers (see each module's docstring):
+  mesh.py — the 1-D 'devices' pool mesh (built through launch.mesh)
+  ops.py  — shard_map building blocks (train / pair-divergence with
+            cross-shard gather / Pallas-kernel transfer / eval)
+  pool.py — the DevicePool backend API the executors call: LocalPool
+            (single host, bit-for-bit pre-pool behavior) and ShardedPool
+            (pool axis partitioned, padded at this boundary only)
+"""
+from repro.sim.shard.mesh import DEVICE_AXIS, make_pool_mesh
+from repro.sim.shard.pool import (DevicePool, LocalPool, ShardedPool,
+                                  make_pool)
+
+__all__ = ["DEVICE_AXIS", "make_pool_mesh", "DevicePool", "LocalPool",
+           "ShardedPool", "make_pool"]

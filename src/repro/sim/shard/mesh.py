@@ -1,0 +1,45 @@
+"""The sim's device-pool mesh: a 1-D 'devices' axis over local chips.
+
+The sharded pool partitions the POOL axis (the leading device axis of
+NetworkState / StackedClients) the same way the distributed FL runtime
+maps clients onto the 'data' mesh axis (fl/client.py) — one contiguous
+block of pool slots per chip.  The mesh is built through
+``launch.mesh.make_local_mesh`` (one local-mesh factory for the whole
+repo) with a trailing 1-wide 'model' axis, so the pool mesh composes
+with model-parallel rules later without a reshape of the runtime.
+
+On the 2-core reference box the mesh is emulated:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 python -m ...
+
+(set BEFORE any jax import) gives jax 8 host-platform devices; the
+shard_map pipeline then runs exactly the collective program a pod would,
+which is what the parity tests pin.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.launch.mesh import make_local_mesh
+
+#: the pool-partition axis name ('devices': pool slots, not chips)
+DEVICE_AXIS = "devices"
+
+
+def make_pool_mesh(n_shards: Optional[int] = None):
+    """('devices', 'model'=1) mesh over ``n_shards`` local devices
+    (default: all of them).  mesh-of-1 is valid — and parity-tested —
+    so the sharded pipeline can always be exercised without emulation."""
+    avail = len(jax.devices())
+    n = avail if n_shards is None else n_shards
+    if n < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n}")
+    if n > avail:
+        raise RuntimeError(
+            f"pool mesh wants {n} devices but jax sees {avail}; on a CPU "
+            "host set XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{n} before the first jax import to emulate them")
+    return make_local_mesh(1, axis_names=(DEVICE_AXIS, "model"),
+                           max_devices=n)

@@ -1,0 +1,274 @@
+"""Device-pool backends: WHERE the per-tick array work runs.
+
+The engine owns state and solver plumbing, the executors own per-tick
+control flow, and a DevicePool owns the placement of the heavy array
+phases — local training, Algorithm-1 pair estimation, the alpha-mixture
+transfer, and the accuracy sweep.  Two backends:
+
+``LocalPool`` (default, ``SimConfig.mesh = 0``)
+    The original single-host calls, bit-for-bit (golden-pinned).  Its
+    async path additionally implements SUBSET-GATHER training
+    (``SimConfig.train_gather``, default on): the clock-eligible lanes
+    are gathered into a compact bucket-padded batch for
+    ``subset_network_step`` instead of running masked no-op SGD for the
+    ineligible majority — per-lane results are identical (lanes keep
+    their full-pool PRNG keys), wall clock scales with the eligible
+    count, and bucketed widths (powers of two) bound recompilation.
+
+``ShardedPool`` (``SimConfig.mesh = k``)
+    The pool axis partitioned over a k-shard 'devices' mesh
+    (shard.mesh / shard.ops): per-shard training, pair estimation with
+    cross-shard client gather, and the Pallas-kernel transfer.  Padding
+    to a shard multiple happens HERE at the pool boundary — NetworkState
+    stays exactly pool-sized, so the engine, scenarios and executors are
+    completely mesh-agnostic.  A sharded run reproduces the LocalPool
+    trajectory field-for-field (parity-tested at mesh-of-1 and an
+    emulated mesh-of-8); only placement changes.
+
+Pool padding uses edge replication for array payloads (cheap, and the
+padded lanes' outputs are discarded) and False/0 for masks and link
+weights, so padded lanes never train, transfer, or contribute energy.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.divergence import chunked_pair_lanes
+from repro.fl.divergence import update_divergences as _update_divergences
+from repro.fl.transfer import apply_transfer
+from repro.sim.training import (mixed_accuracies, network_step,
+                                subset_network_step)
+
+if TYPE_CHECKING:                                   # no import cycle
+    from repro.sim.engine import SimulationEngine
+
+#: per-shard cap on the vmapped pair-classifier batch (matches the local
+#: estimator's pair_chunk so working-set bounds carry over per shard)
+PAIR_CHUNK = 256
+
+
+def make_pool(engine: "SimulationEngine") -> "DevicePool":
+    n = int(getattr(engine.cfg, "mesh", 0) or 0)
+    return ShardedPool(engine, n) if n > 0 else LocalPool(engine)
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Smallest power-of-two >= n (floor 4), capped at the pool size —
+    the static widths the compact subset step compiles for."""
+    w = 4
+    while w < n:
+        w *= 2
+    return min(w, cap)
+
+
+class DevicePool:
+    """Backend API.  All methods take/return POOL-sized arrays; any
+    padding or placement is internal to the backend."""
+
+    name = "base"
+
+    def __init__(self, engine: "SimulationEngine"):
+        self.engine = engine
+
+    # -- full/masked training step (sync round; async masked fallback)
+    def train(self, params, clients, key, active, train_mask=None):
+        raise NotImplementedError
+
+    # -- async tick: refresh params/eps/acc for the eligible lanes only
+    def train_async(self, params, clients, key, active, elig,
+                    eps_prev, acc_prev):
+        raise NotImplementedError
+
+    def update_divergences(self, div, clients, key, pairs, *, ema=0.0):
+        cfg = self.engine.cfg
+        return _update_divergences(
+            div, clients, key, pairs, tau=cfg.div_tau, T=cfg.div_T,
+            batch=cfg.batch, lr=cfg.lr, ema=ema,
+            values_fn=self._values_fn())
+
+    def transfer(self, params, alpha, psi):
+        raise NotImplementedError
+
+    def accuracies(self, params, clients):
+        raise NotImplementedError
+
+    def _values_fn(self):
+        """Hook into fl.divergence.estimate_divergences; None = local."""
+        return None
+
+    # shared async merge: measurements refresh ONLY where a device ticked
+    def _merge_measured(self, g, eps_g, acc_g, eps_prev, acc_prev):
+        """``eps_g``/``acc_g``: the fresh values FOR the lanes in ``g``
+        (same order, length len(g))."""
+        eps_out = np.array(eps_prev, float, copy=True)
+        acc_out = np.array(acc_prev, float, copy=True)
+        eps_out[g] = np.asarray(eps_g, float)
+        acc_out[g] = np.asarray(acc_g, float)
+        return eps_out, acc_out
+
+
+class LocalPool(DevicePool):
+    """Single host: the pre-pool engine behavior, bit-for-bit."""
+
+    name = "local"
+
+    def train(self, params, clients, key, active, train_mask=None):
+        cfg = self.engine.cfg
+        mask = None if train_mask is None else jnp.asarray(train_mask)
+        return network_step(params, clients, key, jnp.asarray(active),
+                            mask, iters=cfg.train_iters, batch=cfg.batch,
+                            lr=cfg.lr)
+
+    def train_async(self, params, clients, key, active, elig,
+                    eps_prev, acc_prev):
+        cfg = self.engine.cfg
+        g = np.flatnonzero(np.logical_and(active, elig))
+        if not cfg.train_gather:
+            # masked full-pool path: every lane computes, ineligible
+            # results are discarded (the pre-subset-gather behavior,
+            # kept as the parity reference)
+            params, eps, acc = self.train(params, clients, key, active,
+                                          elig)
+            eps_out, acc_out = self._merge_measured(
+                g, np.asarray(eps, float)[g], np.asarray(acc, float)[g],
+                eps_prev, acc_prev)
+            return params, eps_out, acc_out
+        if len(g) == 0:                 # nobody's clock fired
+            return params, np.array(eps_prev, float, copy=True), \
+                np.array(acc_prev, float, copy=True)
+        # compact gather: lane i keeps the key split(key, P)[i] it would
+        # have had in the masked step, so per-device results are bitwise
+        # identical — only the no-op lanes disappear
+        keys = jax.random.split(key, clients.n_devices)
+        w = _bucket(len(g), clients.n_devices)
+        gpad = np.concatenate([g, np.full(w - len(g), g[0], g.dtype)])
+        gj = jnp.asarray(gpad)
+        sub = lambda a: a[gj]                                 # noqa: E731
+        trained, eps_s, acc_s = subset_network_step(
+            jax.tree_util.tree_map(sub, params),
+            jax.tree_util.tree_map(sub, clients),
+            keys[gj], jnp.asarray(active)[gj],
+            iters=cfg.train_iters, batch=cfg.batch, lr=cfg.lr)
+        k = len(g)
+        gi = jnp.asarray(g)
+        params = jax.tree_util.tree_map(
+            lambda p, t: p.at[gi].set(t[:k]), params, trained)
+        eps_out, acc_out = self._merge_measured(
+            g, np.asarray(eps_s, float)[:k], np.asarray(acc_s, float)[:k],
+            eps_prev, acc_prev)
+        return params, eps_out, acc_out
+
+    def transfer(self, params, alpha, psi):
+        return apply_transfer(params, jnp.asarray(alpha),
+                              jnp.asarray(psi))
+
+    def accuracies(self, params, clients):
+        return mixed_accuracies(params, clients)
+
+
+class ShardedPool(DevicePool):
+    """Pool axis over a 'devices' mesh; see the module docstring."""
+
+    def __init__(self, engine: "SimulationEngine", n_shards: int):
+        super().__init__(engine)
+        from repro.sim.shard import mesh as mesh_lib, ops
+        self.mesh = mesh_lib.make_pool_mesh(n_shards)
+        self.n_shards = self.mesh.shape[mesh_lib.DEVICE_AXIS]
+        self.name = f"sharded-{self.n_shards}"
+        cfg = engine.cfg
+        self._train_fn = ops.build_train_step(
+            self.mesh, iters=cfg.train_iters, batch=cfg.batch, lr=cfg.lr)
+        self._pair_fn = ops.build_pair_values(
+            self.mesh, tau=cfg.div_tau, T=cfg.div_T, batch=cfg.batch,
+            lr=cfg.lr)
+        self._transfer_fn = ops.build_transfer(self.mesh)
+        self._acc_fn = ops.build_accuracies(self.mesh)
+
+    # ------------------------------------------------------ pool padding
+    def _pad(self, n: int) -> int:
+        return -n % self.n_shards
+
+    def _pad_tree(self, tree, pad: int):
+        if not pad:
+            return tree
+        return jax.tree_util.tree_map(
+            lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1),
+                              mode="edge"), tree)
+
+    @staticmethod
+    def _pad_mask(m, pad: int):
+        return np.concatenate([np.asarray(m, bool), np.zeros(pad, bool)]) \
+            if pad else np.asarray(m, bool)
+
+    def _unpad_tree(self, tree, n: int, pad: int):
+        if not pad:
+            return tree
+        return jax.tree_util.tree_map(lambda a: a[:n], tree)
+
+    # ------------------------------------------------------------ phases
+    def train(self, params, clients, key, active, train_mask=None):
+        cfg = self.engine.cfg
+        n = clients.n_devices
+        pad = self._pad(n)
+        keys = jax.random.split(key, n)     # the single-host key stream
+        mask = np.ones(n, bool) if train_mask is None \
+            else np.asarray(train_mask, bool)
+        out, eps, acc = self._train_fn(
+            self._pad_tree(params, pad), self._pad_tree(clients, pad),
+            self._pad_tree(keys, pad),
+            jnp.asarray(self._pad_mask(active, pad)),
+            jnp.asarray(self._pad_mask(mask, pad)))
+        return self._unpad_tree(out, n, pad), eps[:n], acc[:n]
+
+    def train_async(self, params, clients, key, active, elig,
+                    eps_prev, acc_prev):
+        # under SPMD the masked lanes are free (they run on the shards
+        # that own them either way), so the sharded pool keeps the
+        # one-call masked step rather than a gather whose indices would
+        # change the compiled program every tick
+        g = np.flatnonzero(np.logical_and(active, elig))
+        params, eps, acc = self.train(params, clients, key, active, elig)
+        eps_out, acc_out = self._merge_measured(
+            g, np.asarray(eps, float)[g], np.asarray(acc, float)[g],
+            eps_prev, acc_prev)
+        return params, eps_out, acc_out
+
+    def _values_fn(self):
+        def values(h0, clients, pi, pj, keys, *, tau, T, batch, lr):
+            del tau, T, batch, lr           # baked into _pair_fn at init
+            cp = self._pad_tree(clients, self._pad(clients.n_devices))
+            # pair-axis chunking: per-shard width w (<= PAIR_CHUNK), so
+            # a 4-pair gossip tick pads to one lane per shard while an
+            # all-pairs bootstrap streams full chunks; pad_partial — the
+            # lanes must always divide the mesh
+            w = min(PAIR_CHUNK, -(-len(pi) // self.n_shards))
+
+            def call(ci, cj, ck):
+                return self._pair_fn(h0, cp, jnp.asarray(ci, jnp.int32),
+                                     jnp.asarray(cj, jnp.int32), ck)
+
+            return chunked_pair_lanes(pi, pj, keys, w * self.n_shards,
+                                      call, pad_partial=True)
+        return values
+
+    def transfer(self, params, alpha, psi):
+        n = len(psi)
+        pad = self._pad(n)
+        a = np.asarray(alpha, np.float32)
+        s = np.asarray(psi, np.float32)
+        if pad:
+            a = np.pad(a, ((0, pad), (0, pad)))    # zero links: padded
+            s = np.pad(s, (0, pad))                # lanes keep their own
+        out = self._transfer_fn(self._pad_tree(params, pad),
+                                jnp.asarray(a), jnp.asarray(s))
+        return self._unpad_tree(out, n, pad)
+
+    def accuracies(self, params, clients):
+        n = clients.n_devices
+        pad = self._pad(n)
+        return self._acc_fn(self._pad_tree(params, pad),
+                            self._pad_tree(clients, pad))[:n]

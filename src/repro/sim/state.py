@@ -52,6 +52,13 @@ class NetworkState:
     def active_idx(self) -> np.ndarray:
         return np.flatnonzero(self.active)
 
+    @property
+    def labeled_devices(self) -> np.ndarray:
+        """(P,) bool, host-side: devices holding ANY labeled sample —
+        the only ones whose local SGD ever applies (unlabeled devices
+        progress through transfer/gossip alone)."""
+        return np.asarray(self.clients.labeled).any(axis=1)
+
     def unknown_active_pairs(self) -> np.ndarray:
         """(M, 2) active pairs whose divergence was never estimated."""
         a = self.active_idx

@@ -23,6 +23,32 @@ from repro.fl.client import (StackedClients, empirical_errors,
                              train_sources, true_accuracies)
 
 
+def network_step_core(params, clients: StackedClients, keys, active,
+                      train_mask=None, *, iters: int, batch: int,
+                      lr: float):
+    """The traceable body shared by every entry point: ``network_step``
+    (full pool, one host), ``subset_network_step`` (compact gathered
+    lanes), and the mesh-sharded pool (per-shard slices under shard_map).
+    ``keys``: per-device PRNG keys, (N, key_dim) — every lane is
+    independent, so callers may gather/shard the device axis freely
+    without changing any lane's result."""
+    trained = train_sources(params, clients, keys,
+                            iters=iters, batch=batch, lr=lr)
+    update = jnp.logical_and(jnp.any(clients.labeled, axis=1),
+                             jnp.asarray(active))           # (N,)
+    if train_mask is not None:
+        update = jnp.logical_and(update, jnp.asarray(train_mask))
+
+    def keep(new, old):
+        m = update.reshape((-1,) + (1,) * (new.ndim - 1))
+        return jnp.where(m, new, old)
+
+    params = jax.tree_util.tree_map(keep, trained, params)
+    eps = empirical_errors(params, clients)
+    acc = true_accuracies(params, clients)
+    return params, eps, acc
+
+
 @functools.partial(jax.jit, static_argnames=("iters", "batch", "lr"))
 def network_step(params, clients: StackedClients, key, active,
                  train_mask=None, *, iters: int, batch: int, lr: float):
@@ -49,21 +75,21 @@ def network_step(params, clients: StackedClients, key, active,
       own_acc  — ground-truth accuracy of each device's own params, (N,)
     """
     keys = jax.random.split(key, clients.n_devices)
-    trained = train_sources(params, clients, keys,
-                            iters=iters, batch=batch, lr=lr)
-    update = jnp.logical_and(jnp.any(clients.labeled, axis=1),
-                             jnp.asarray(active))           # (N,)
-    if train_mask is not None:
-        update = jnp.logical_and(update, jnp.asarray(train_mask))
+    return network_step_core(params, clients, keys, active, train_mask,
+                             iters=iters, batch=batch, lr=lr)
 
-    def keep(new, old):
-        m = update.reshape((-1,) + (1,) * (new.ndim - 1))
-        return jnp.where(m, new, old)
 
-    params = jax.tree_util.tree_map(keep, trained, params)
-    eps = empirical_errors(params, clients)
-    acc = true_accuracies(params, clients)
-    return params, eps, acc
+@functools.partial(jax.jit, static_argnames=("iters", "batch", "lr"))
+def subset_network_step(params, clients: StackedClients, keys, active, *,
+                        iters: int, batch: int, lr: float):
+    """Compact-lane variant for the async subset-gather path: the caller
+    gathers ONLY the clock-eligible lanes (params/clients rows and their
+    per-device keys from the full pool's ``split``), so no masked no-op
+    SGD runs for the ineligible majority.  Per-lane results are identical
+    to the masked full-pool step — lanes are independent and keep their
+    full-pool PRNG keys — which the parity test pins."""
+    return network_step_core(params, clients, keys, active, None,
+                             iters=iters, batch=batch, lr=lr)
 
 
 @jax.jit
