@@ -1,21 +1,73 @@
-"""Minimal repro.sim example: 12 devices under channel drift for 6 rounds,
-then a peek at what the drift-gated warm re-solves did.
+"""Feature-drift end-to-end: domain shift over time with budgeted,
+drift-aware divergence re-estimation — run single-host (LocalPool),
+then replayed on an emulated 2-shard device mesh and compared
+field-for-field.
+
+8 devices under the `feature-drift` scenario: half the network's
+feature distributions slide toward a foreign domain, each drift step
+dirties the device's Algorithm-1 pairs, and every round the engine
+re-measures only a budgeted stalest-first subset of the dirty pairs
+(`div_budget`) instead of all N(N-1)/2 — the moved estimates trip
+`resolve_reason="drift"` warm re-solves.
 
     PYTHONPATH=src python examples/sim_drift.py
+
+The mesh replay forces 2 emulated host-platform devices, which must
+happen before the first jax import — hence the subprocess.
 """
+import json
+import os
+import subprocess
+import sys
+
 import numpy as np
 
 from repro.sim import SimConfig, SimulationEngine
+from repro.sim.metrics import read_jsonl, strip_nondeterministic
 
-cfg = SimConfig(scenario="channel-drift", devices=12, rounds=6, seed=0,
-                samples_per_device=60, train_iters=15,
-                log_path="results/sim/example_drift.jsonl", verbose=True)
-rows = SimulationEngine(cfg).run()
+CFG = dict(scenario="feature-drift", devices=8, rounds=4, seed=0,
+           samples_per_device=40, train_iters=8, div_tau=1, div_T=6,
+           batch=10, solver_max_outer=3, solver_inner_steps=200,
+           feature_drift_p=0.6, feature_drift_step=0.3,
+           resolve_threshold=0.05, div_budget=6)
+LOCAL_LOG = "results/sim/example_drift.jsonl"
+MESH_LOG = "results/sim/example_drift_mesh2.jsonl"
+
+# ---- single-host run --------------------------------------------------
+rows = SimulationEngine(SimConfig(log_path=LOCAL_LOG, verbose=True,
+                                  **CFG)).run()
 
 resolves = [r for r in rows if r["resolved"]]
-print(f"\n{len(resolves)} solves over {len(rows)} rounds")
-print("outer iters per solve:",
-      [(r['round'], r['solver_iters'], 'warm' if r['warm'] else 'cold')
-       for r in resolves])
+print(f"\n{len(resolves)} solves over {len(rows)} rounds; reasons:",
+      [r["resolve_reason"] for r in resolves])
+print("per-round drifted devices:", [r["n_drifted"] for r in rows])
+print("per-round dirty pairs:    ", [r["n_dirty_pairs"] for r in rows])
+print("per-round re-estimated:   ", [r["n_reestimated"] for r in rows],
+      f"(budget {CFG['div_budget']}, all-pairs would be "
+      f"{CFG['devices'] * (CFG['devices'] - 1) // 2})")
 print("target accuracy trajectory:",
       np.round([r["mean_target_acc"] for r in rows], 3).tolist())
+
+# ---- emulated 2-shard mesh replay ------------------------------------
+print("\nreplaying on an emulated 2-shard device mesh ...")
+env = dict(os.environ)
+env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=2 "
+                    + env.get("XLA_FLAGS", ""))
+src = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                           if env.get("PYTHONPATH") else "")
+child = f"""
+from repro.sim import SimConfig, SimulationEngine
+SimulationEngine(SimConfig(mesh=2, log_path={MESH_LOG!r},
+                           **{CFG!r})).run()
+"""
+subprocess.run([sys.executable, "-c", child], env=env, check=True)
+
+local = strip_nondeterministic(read_jsonl(LOCAL_LOG))
+mesh = strip_nondeterministic(read_jsonl(MESH_LOG))
+match = json.dumps(local, default=float) == json.dumps(mesh, default=float)
+print(f"mesh-of-2 parity vs single host: "
+      f"{'field-for-field OK' if match else 'MISMATCH'}")
+if not match:
+    sys.exit(1)

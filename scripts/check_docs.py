@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""CI docs-coverage gate: every ``SimConfig`` knob and every metrics
+field (``RoundRecord``) must be documented in docs/metrics-schema.md.
+
+The check is by field NAME in backticks (the doc convention for code
+identifiers), introspected from the live dataclasses — so adding a
+config knob or a metrics field without documenting it fails the build,
+and the reference can never silently rot behind the code.
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+
+from repro.sim.engine import SimConfig            # noqa: E402
+from repro.sim.metrics import (NONDETERMINISTIC_FIELDS,  # noqa: E402
+                               RoundRecord)
+
+DOC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "docs", "metrics-schema.md")
+
+
+def missing_fields(text: str):
+    """(class name, field) pairs whose backticked name is absent."""
+    out = []
+    for cls in (SimConfig, RoundRecord):
+        for f in dataclasses.fields(cls):
+            if f"`{f.name}`" not in text:
+                out.append((cls.__name__, f.name))
+    return out
+
+
+def main() -> int:
+    if not os.path.exists(DOC):
+        print(f"check_docs: {DOC} does not exist", file=sys.stderr)
+        return 1
+    text = open(DOC).read()
+    missing = missing_fields(text)
+    for cls, name in missing:
+        print(f"check_docs: {cls}.{name} is undocumented in "
+              f"docs/metrics-schema.md", file=sys.stderr)
+    # the nondeterminism contract must be spelled out too
+    for name in NONDETERMINISTIC_FIELDS:
+        if f"`{name}`" not in text:
+            print(f"check_docs: nondeterministic field {name} missing",
+                  file=sys.stderr)
+            missing.append(("NONDETERMINISTIC_FIELDS", name))
+    n_cfg = len(dataclasses.fields(SimConfig))
+    n_rec = len(dataclasses.fields(RoundRecord))
+    if missing:
+        return 1
+    print(f"check_docs: OK — {n_cfg} SimConfig knobs + {n_rec} metrics "
+          f"fields all documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

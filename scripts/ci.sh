@@ -23,6 +23,24 @@ python -m repro.sim.run --engine async-gossip --scenario stragglers \
     --solver-max-outer 3 --solver-inner-steps 200 --resolve-patience 3 \
     --quiet --out "${REPRO_SIM_LOG_ASYNC:-results/sim/ci_async_smoke.jsonl}"
 
+# feature-drift smoke, both engines: domain shift dirties Algorithm-1
+# pairs, the budgeted stalest-first refresh re-measures them through the
+# row-targeted pool path, and drift-reason warm re-solves fire
+python -m repro.sim.run --scenario feature-drift --devices 8 --rounds 3 \
+    --samples 40 --train-iters 8 --div-T 6 --solver-max-outer 3 \
+    --solver-inner-steps 200 --div-budget 6 --drift-p 0.6 \
+    --drift-step 0.3 --quiet --out "results/sim/ci_drift_sync.jsonl"
+python -m repro.sim.run --engine async-gossip \
+    --scenario feature-drift-async --devices 8 --rounds 3 --samples 40 \
+    --train-iters 8 --div-T 6 --solver-max-outer 3 \
+    --solver-inner-steps 200 --resolve-patience 3 --div-budget 6 \
+    --drift-p 0.6 --drift-step 0.3 --quiet \
+    --out "results/sim/ci_drift_async.jsonl"
+
+# docs-coverage gate: every SimConfig knob and metrics field must be
+# documented in docs/metrics-schema.md
+python scripts/check_docs.py
+
 # emulated-mesh smoke gate: the sharded device pool on 8 forced
 # host-platform devices (XLA_FLAGS must precede the first jax import,
 # hence fresh processes), both engines end-to-end through the CLI, then

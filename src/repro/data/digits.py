@@ -125,6 +125,22 @@ class DigitDataset:
     domain_ids: np.ndarray      # (N,) int32 index into DOMAINS
 
 
+def render_images(labels: np.ndarray, domain: str,
+                  seed: int) -> np.ndarray:
+    """Render the GIVEN label sequence in ``domain``: (n, 28, 28, 3)
+    float32, one independent style draw per sample from a fresh
+    ``default_rng(seed)`` stream.
+
+    This is the domain-interpolation primitive's other endpoint: to
+    drift a device's features toward another domain, re-render its
+    exact labels there (same seed -> same styles every call, so a
+    time-varying mix needs only ONE alt-domain render per device) and
+    blend pixel-wise with the original images
+    (``repro.data.partition.interpolate_features``)."""
+    rng = np.random.default_rng(seed)
+    return np.stack([render_digit(int(d), domain, rng) for d in labels])
+
+
 def make_domain_dataset(domain: str, n: int, seed: int,
                         label_subset=None) -> DigitDataset:
     rng = np.random.default_rng(seed)

@@ -126,6 +126,32 @@ def reveal_labels(dev: DeviceData, frac: float,
                       dev.true_labels)
 
 
+def interpolate_features(base: DeviceData, alt_images: np.ndarray,
+                         mix: float) -> DeviceData:
+    """Feature-drift re-partitioning: a copy of ``base`` whose images are
+    the pixel-wise convex mix ``(1 - mix) * base + mix * alt_images`` —
+    the device's feature distribution sliding from its original domain
+    toward an alternative render of the SAME samples (labels, masks and
+    ground truth are untouched: only features drift, exactly the
+    covariate-shift regime the paper's divergence bound prices).
+
+    ``mix`` is ABSOLUTE (0 = original, 1 = fully the alt domain), so a
+    time-varying schedule re-applies against the same cached ``base``
+    rather than compounding round-over-round blends; callers keep the
+    pristine original (the engine caches it at the first drift).
+
+    ``alt_images`` must be a per-sample aligned render of ``base``'s
+    labels (see ``repro.data.digits.render_images``)."""
+    if alt_images.shape != base.images.shape:
+        raise ValueError(
+            f"alt_images shape {alt_images.shape} does not match device "
+            f"images {base.images.shape}; render the device's own labels")
+    m = float(np.clip(mix, 0.0, 1.0))
+    img = ((1.0 - m) * base.images + m * alt_images).astype(np.float32)
+    return DeviceData(img, base.labels, base.labeled_mask,
+                      base.domain_ids, base.true_labels)
+
+
 def make_device(setting: str, samples_per_device: int, seed: int,
                 labeled_ratio: float,
                 label_subset: Optional[Sequence[int]] = None,

@@ -14,6 +14,34 @@ Only classifier parameters ever cross the link — the FL privacy property.
 All N(N-1)/2 pairs train simultaneously under one vmapped lax.scan (the
 pairwise parameter exchange is a collective_permute between the two pair
 members on a real pod; under vmap it is the pairwise average below).
+
+The module has grown three orthogonal axes since the one-shot estimator,
+each with an invariant the simulator's parity guarantees rest on:
+
+INCREMENTAL (``pairs`` / ``update_divergences``)
+    Estimate/refresh an explicit pair subset instead of all pairs; the
+    merge back into the running (N, N) matrix is a symmetric scatter
+    with an optional per-pair EMA weight on the old value.  The solver
+    never sees a half-updated matrix: callers get a merged copy.
+
+CHUNKED (``pair_chunk`` / ``chunked_pair_lanes``)
+    The pair axis is driven in fixed-width padded chunks so thousands
+    of vmapped pair-classifiers compile once and bound their stacked
+    working set.  Pad lanes repeat a real pair and their outputs are
+    discarded — padding never changes a value.
+
+RELOCATABLE (``pair_keys`` / ``values_fn``)
+    Each pair's estimate depends only on its own (i, j, key) lane.  The
+    per-pair key schedule and the canonical (min, max) pair order are
+    fixed HERE, before any chunking or sharding, so any backend that
+    keeps lanes intact — a different chunk width, the mesh-sharded
+    pool, a row-targeted gather — reproduces the local values
+    bit-for-bit.
+
+``budget_pairs`` (bottom) is the drift-aware scheduling companion: given
+pairs whose estimates were invalidated by feature drift, it ranks them
+stalest-first and truncates to a per-tick budget — the simulator
+re-measures the most out-of-date links first instead of all pairs.
 """
 from __future__ import annotations
 
@@ -95,11 +123,20 @@ def pairwise_divergence_values(h0, clients: StackedClients, pair_i, pair_j,
 
 def pair_keys(key, npairs: int, pair_chunk: int = 256):
     """The per-pair PRNG keys of the local chunked estimator, as one
-    (npairs, key_dim) array: chunk c draws ``split(fold_in(key, c0),
-    pair_chunk)`` (a single call draws ``split(key, npairs)``), and pair
-    p's key is its lane of its chunk's split.  Shared by the local and
-    mesh-sharded estimation paths so a re-chunked/sharded run reproduces
-    the local values bit-for-bit."""
+    (npairs, key_dim) array.
+
+    Key schedule: when everything fits in one chunk
+    (``npairs <= pair_chunk``) the keys are simply
+    ``split(key, npairs)`` — the historical single-call stream.  Beyond
+    that, chunk c (pairs [c0, c0 + pair_chunk)) draws
+    ``split(fold_in(key, c0), pair_chunk)`` and pair p's key is its lane
+    of its chunk's split.  Chunk boundaries are part of the schedule —
+    which is exactly why this function exists: it is THE schedule,
+    computed once by ``estimate_divergences`` and handed to whichever
+    backend executes the lanes (local chunk loop, mesh-sharded pool,
+    row-targeted refresh).  Backends may re-chunk, pad, or shard the
+    (i, j, key) lanes freely; because no backend ever derives keys
+    itself, every backend reproduces the local values bit-for-bit."""
     if npairs <= pair_chunk:
         return jax.random.split(key, npairs)
     out = [jax.random.split(jax.random.fold_in(key, c0), pair_chunk)
@@ -154,7 +191,8 @@ def _chunked_pair_values(h0, clients: StackedClients, pi, pj, keys, *,
 def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
                          T: int = 25, batch: int = 10, lr: float = 0.01,
                          pairs=None, pair_chunk: int = 256,
-                         values_fn=None) -> np.ndarray:
+                         values_fn=None, keys=None,
+                         h0=None) -> np.ndarray:
     """Algorithm 1: returns the symmetric (N, N) matrix of empirical
     d_H estimates (diagonal 0).
 
@@ -171,10 +209,27 @@ def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
 
     ``values_fn``: optional executor for the per-pair values,
     ``fn(h0, clients, pi, pj, keys, tau=, T=, batch=, lr=) -> (npairs,)``
-    — the hook the mesh-sharded device pool uses to run the same pair
-    lanes under shard_map.  The key schedule (``pair_keys``) and the
-    canonicalized pair order are fixed HERE, so any backend that keeps
-    per-pair lanes intact reproduces the local values bit-for-bit."""
+    — the placement hook.  The mesh-sharded device pool passes one that
+    runs the same lanes under shard_map (cross-shard client gather);
+    the budgeted drift refresh passes one that first gathers just the
+    rows of the devices the pairs actually touch.  The contract: treat
+    (pi, pj, keys) as opaque aligned lanes, return one value per lane
+    in order.  The key schedule (``pair_keys``), the shared classifier
+    init ``h0``, and the canonicalized (min, max) pair order are fixed
+    HERE — a values_fn that keeps lanes intact reproduces the local
+    values bit-for-bit, which the parity tests pin.
+
+    ``keys`` / ``h0``: optional EXPLICIT per-pair keys ((npairs,
+    key_dim), aligned with the given ``pairs`` order) and classifier
+    init, overriding the positional ``pair_keys`` schedule and the
+    per-call init drawn from ``key``.  The simulator's drift refresh
+    passes CONTENT-ADDRESSED keys (derived from the pair's device ids,
+    not its batch position) plus a per-run ``h0``, which makes an
+    estimate a deterministic function of (pair identity, pair data):
+    re-measuring an unchanged pair reproduces its previous value
+    exactly, and the measured value never depends on which batch or
+    round the scheduler happened to put the pair in.  When both are
+    given ``key`` may be None."""
     n = clients.n_devices
     if pairs is None:
         pi, pj = np.triu_indices(n, k=1)
@@ -184,9 +239,15 @@ def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
             return np.zeros((n, n))
         pi, pj = np.minimum(pairs[:, 0], pairs[:, 1]), \
             np.maximum(pairs[:, 0], pairs[:, 1])
-    key, init_key = jax.random.split(key)
-    h0 = cnn.cnn_init(init_key, num_classes=2)
-    keys = pair_keys(key, len(pi), pair_chunk)
+    if keys is not None and len(keys) != len(pi):
+        raise ValueError(f"explicit keys: {len(keys)} lanes for "
+                         f"{len(pi)} pairs")
+    if keys is None or h0 is None:
+        key, init_key = jax.random.split(key)
+        if h0 is None:
+            h0 = cnn.cnn_init(init_key, num_classes=2)
+        if keys is None:
+            keys = pair_keys(key, len(pi), pair_chunk)
 
     if values_fn is not None:
         d = np.asarray(values_fn(h0, clients, pi, pj, keys,
@@ -202,29 +263,68 @@ def estimate_divergences(clients: StackedClients, key, *, tau: int = 4,
 
 def update_divergences(div: np.ndarray, clients: StackedClients, key,
                        pairs, *, tau: int = 4, T: int = 25, batch: int = 10,
-                       lr: float = 0.01, ema=0.0,
-                       values_fn=None) -> np.ndarray:
+                       lr: float = 0.01, ema=0.0, values_fn=None,
+                       keys=None, h0=None) -> np.ndarray:
     """Incrementally refresh ``div`` on the given (P, 2) pairs only and
-    return the merged copy (Algorithm 1 run just for the dirty links).
+    return the merged copy (Algorithm 1 run just for those links) — the
+    pair-incremental path every divergence mutation in the simulator
+    flows through: the sync bootstrap of never-estimated pairs, the
+    async gossip meetings, and the drift-aware budgeted refresh.
 
     ``ema``: weight given to the OLD value when merging — scalar or
-    per-pair (P,) array.  0 (default) replaces outright, the original
-    behavior; the async-gossip executor passes ``div_ema`` for pairs
-    whose link was estimated before, so repeated gossip meetings average
-    the Algorithm-1 estimator's sampling noise instead of churning the
-    solver input (and 0 for never-estimated pairs, which have no old
-    value to keep).
+    per-pair (P,) array, applied in the symmetric scatter
+    ``out[i, j] = ema * out[i, j] + (1 - ema) * fresh[i, j]``.
+    0 (default) replaces outright, the original behavior.  Callers pick
+    the weight by what the old value still means:
 
-    ``values_fn`` is forwarded to ``estimate_divergences`` (the sharded
-    device pool's execution hook)."""
+      * never-estimated pair — no old value to keep: 0
+      * repeated gossip meeting on an unchanged link — old value is an
+        independent sample of the same quantity: ``div_ema`` averages
+        the Algorithm-1 estimator's sampling noise instead of churning
+        the solver input
+      * drift-dirtied pair — the old value measured a distribution that
+        no longer exists: 0 again (keeping any of it would anchor the
+        solver to the pre-drift world)
+
+    ``values_fn``, ``keys`` and ``h0`` are forwarded to
+    ``estimate_divergences`` (the placement hook and the
+    content-addressed-key override; see there for both contracts)."""
     pairs = np.atleast_2d(np.asarray(pairs, np.int32))
     out = np.array(div, float, copy=True)
     if pairs.size == 0:
         return out
     fresh = estimate_divergences(clients, key, tau=tau, T=T, batch=batch,
-                                 lr=lr, pairs=pairs, values_fn=values_fn)
+                                 lr=lr, pairs=pairs, values_fn=values_fn,
+                                 keys=keys, h0=h0)
     pi, pj = pairs[:, 0], pairs[:, 1]        # vectorized symmetric scatter
     w = np.broadcast_to(np.asarray(ema, float), pi.shape)
     out[pi, pj] = w * out[pi, pj] + (1.0 - w) * fresh[pi, pj]
     out[pj, pi] = w * out[pj, pi] + (1.0 - w) * fresh[pj, pi]
     return out
+
+
+def budget_pairs(pairs: np.ndarray, div_tick: np.ndarray,
+                 budget: int) -> np.ndarray:
+    """Rank candidate ``pairs`` stalest-first and truncate to ``budget``
+    — the drift-aware re-estimation schedule.
+
+    ``pairs``: (M, 2) candidate pairs (the simulator passes the dirty
+    active pairs).  ``div_tick``: (N, N) tick each pair was last
+    estimated (-1: never).  ``budget``: max pairs to return; <= 0 means
+    unbounded (every candidate, still in rank order).
+
+    Ordering is (last-estimate tick ascending, i, j) — fully
+    deterministic, no RNG: the pair whose estimate is most out of date
+    is re-measured first, and ties break on device ids so two runs of
+    the same trajectory refresh identical subsets.  Never-estimated
+    candidates (tick -1) therefore always outrank once-measured ones,
+    which is the right priority: the solver is already substituting a
+    prior or a stale value for them."""
+    pairs = np.atleast_2d(np.asarray(pairs, np.int32))
+    if pairs.size == 0:
+        return np.zeros((0, 2), np.int32)
+    pi, pj = pairs[:, 0], pairs[:, 1]
+    order = np.lexsort((pj, pi, div_tick[pi, pj]))
+    if budget > 0:
+        order = order[:budget]
+    return pairs[order]

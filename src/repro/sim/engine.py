@@ -14,7 +14,7 @@ them share:
 
   - NetworkState construction (fixed-size pool, spares for churn)
   - the scenario mutation API (drift_channels / set_active /
-    reveal_labels / set_tick_period)
+    reveal_labels / set_tick_period / drift_features)
   - the drift metric against the last-solve snapshot
   - warm-started (P) re-solves (previous SolverResult remapped over
     churn) and installation of the solved assignment
@@ -35,7 +35,10 @@ from repro.core.bounds import BoundTerms
 from repro.core.energy import EnergyModel
 from repro.core.problem import STLFProblem
 from repro.core.solver import SolverResult, solve_stlf
-from repro.data.partition import build_network, make_device, reveal_labels
+from repro.data.digits import DOMAINS, render_images
+from repro.data.partition import (DeviceData, build_network,
+                                  interpolate_features, make_device,
+                                  reveal_labels)
 from repro.fl.client import init_client_params, stack_clients
 from repro.fl.transfer import column_normalize
 from repro.sim.executors import get_executor
@@ -79,6 +82,26 @@ class SimConfig:
     # Algorithm-1 settings (sim-scale: cheaper than one-shot reproduction)
     div_tau: int = 1
     div_T: int = 8
+    #: drift-aware re-estimation policy: 'dirty' (default) re-measures
+    #: only pairs whose estimates were invalidated by feature drift,
+    #: budgeted + stalest-first; 'all' re-measures EVERY active pair
+    #: every tick after the bootstrap — the naive reference the
+    #: sim_drift benchmark compares against
+    div_refresh: str = "dirty"
+    #: max dirty pairs re-estimated per tick under div_refresh='dirty';
+    #: -1: n_active (a vanishing fraction of the N(N-1)/2 total as the
+    #: network grows), 0: unbounded (all dirty pairs)
+    div_budget: int = -1
+    #: PRNG addressing of Algorithm-1 measurements: 'positional'
+    #: (historical, golden-pinned — keys follow the pair's position in
+    #: the measurement batch) or 'content' — every measurement's key
+    #: derives from the pair's device ids and the classifier init is
+    #: per-run, so an estimate is a deterministic function of (pair,
+    #: data): re-measuring an unchanged pair reproduces its value
+    #: exactly, and refresh POLICIES can be compared free of sampling
+    #: noise (benchmarks/sim_drift.py).  The budgeted drift refresh
+    #: itself is always content-addressed.
+    div_key_mode: str = "positional"
     # objective weights + solver
     phi_s: float = 1.0
     phi_t: float = 5.0
@@ -123,6 +146,13 @@ class SimConfig:
     div_prior: float = 1.0
     # scenario knobs (read by scenarios.py via getattr)
     drift_sigma: float = 0.15
+    #: feature-drift scenario: fraction of the initially-active devices
+    #: designated as drifters at setup
+    feature_drift_frac: float = 0.5
+    #: per-drifter per-tick probability of a drift step
+    feature_drift_p: float = 0.3
+    #: domain-mix increment of one drift step (mix is clipped at 1.0)
+    feature_drift_step: float = 0.15
     churn_p_leave: float = 0.35
     churn_p_join: float = 0.35
     label_frac: float = 0.25
@@ -138,6 +168,14 @@ class SimConfig:
 class SimulationEngine:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
+        if cfg.div_refresh not in ("dirty", "all"):
+            raise ValueError(
+                f"unknown div_refresh {cfg.div_refresh!r}; "
+                "available: dirty, all")
+        if cfg.div_key_mode not in ("positional", "content"):
+            raise ValueError(
+                f"unknown div_key_mode {cfg.div_key_mode!r}; "
+                "available: positional, content")
         scen_cls = get_scenario(cfg.scenario)
         self.rng = np.random.default_rng(cfg.seed)
         self.scenario = scen_cls(cfg, np.random.default_rng(cfg.seed + 1))
@@ -164,6 +202,8 @@ class SimulationEngine:
             params=init_client_params(p, k_init),
             eps_hat=np.ones(p), own_acc=np.zeros(p),
             div_hat=np.zeros((p, p)), div_known=np.eye(p, dtype=bool),
+            div_dirty=np.zeros((p, p), bool),
+            div_tick=np.full((p, p), -1, int),
             energy=EnergyModel.sample(p, np.random.default_rng(cfg.seed)),
             psi=np.zeros(p), alpha=np.zeros((p, p)))
         self.logger = MetricsLogger(cfg.log_path)
@@ -172,6 +212,11 @@ class SimulationEngine:
         self._prev_links: set = set()
         self._energy_cum = 0.0
         self._solve_tick = -1
+        # feature-drift caches: pristine per-device data + the one
+        # alt-domain render a device's time-varying mix blends against
+        self._drift_base: dict = {}
+        self._drift_alt: dict = {}
+        self._drift_domain: dict = {}
         self.pool = make_pool(self)
         self.executor = get_executor(cfg.engine)(self)
         self.executor.setup()
@@ -200,6 +245,50 @@ class SimulationEngine:
         keep no clocks, i.e. sync)."""
         if self.state.clocks is not None:
             self.state.clocks.set_period(device, period)
+
+    def drift_features(self, device: int, mix: float,
+                       domain: Optional[str] = None) -> str:
+        """Feature drift: re-render ``device``'s features as the convex
+        mix ``(1 - mix) * original + mix * alt-domain`` and invalidate
+        every Algorithm-1 estimate the device participates in (its pairs
+        go dirty; the executors' budgeted refresh re-measures them,
+        stalest first, and the moved estimates register on the drift
+        metric — so sustained drift eventually trips a warm re-solve
+        with ``resolve_reason='drift'``).
+
+        The first call for a device caches its pristine data and renders
+        the alt-domain counterpart ONCE (deterministic seed per device:
+        ``cfg.seed + 7000 + device``, independent of call order); later
+        calls only re-blend, so ``mix`` is absolute, not incremental.
+        ``domain`` picks the drift target on that first call (default:
+        the next domain after the device's dominant one in
+        ``data.digits.DOMAINS`` — a domain genuinely foreign to the
+        device); it is ignored once cached.  Returns the target domain.
+        """
+        st = self.state
+        j = int(device)
+        if j not in self._drift_base:
+            base = st.pool[j]
+            if domain is None:
+                own = int(np.bincount(base.domain_ids).argmax())
+                domain = DOMAINS[(own + 1) % len(DOMAINS)]
+            self._drift_base[j] = base
+            self._drift_alt[j] = render_images(
+                base.true_labels, domain, self.cfg.seed + 7000 + j)
+            self._drift_domain[j] = domain
+        cur = st.pool[j]
+        blended = interpolate_features(self._drift_base[j],
+                                       self._drift_alt[j], mix)
+        # only FEATURES drift: the blend is rebuilt from the pristine
+        # base, but labels may have been revealed since it was cached
+        # (label-arrival composing with feature drift), so the device's
+        # CURRENT label state is carried, never the cached one
+        st.pool[j] = DeviceData(blended.images, cur.labels,
+                                cur.labeled_mask, cur.domain_ids,
+                                cur.true_labels)
+        st.mark_pairs_dirty(j)
+        self._restack = True
+        return self._drift_domain[j]
 
     # ------------------------------------------------------------ internals
     def _reseed_device(self, j: int):

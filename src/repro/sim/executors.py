@@ -32,6 +32,17 @@ information a decentralized deployment would have.  Algorithm-1 gossip
 traffic is unpriced, matching the sync engine; the energy/transmissions
 metrics price the model exchanges of the tick.
 
+Both executors share a drift-aware re-estimation phase
+(``_refresh_dirty``): when a scenario drifts a device's features
+(``engine.drift_features``), every Algorithm-1 estimate involving that
+device is flagged dirty in ``NetworkState.div_dirty``, and each
+subsequent tick re-measures a BUDGETED top-K of the dirty active pairs,
+stalest first (``SimConfig.div_budget`` / ``div_refresh``), through the
+device pool's row-targeted refresh path — so the solver tracks a moving
+divergence landscape at a per-tick cost independent of N(N-1)/2.
+Scenarios that never drift features keep an empty dirty set and are
+bit-for-bit unaffected.
+
 Neither executor touches arrays directly for the heavy phases: training,
 divergence estimation, the mixture transfer and the accuracy sweep all
 go through ``engine.pool`` (repro.sim.shard.pool), so the same control
@@ -47,6 +58,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fl.client import stack_clients
+from repro.fl.divergence import budget_pairs
 from repro.sim.clock import DeviceClocks
 from repro.sim.metrics import RoundRecord
 
@@ -125,6 +137,92 @@ class Executor:
             reason = None
         return reason, solve_age
 
+    def _refresh_dirty(self, t: int):
+        """Drift-aware divergence re-estimation, shared by both
+        executors (runs after the mode's own measurement phase, before
+        the re-solve gate).  Under ``div_refresh='dirty'`` (default):
+        re-measure a budgeted top-K of the active pairs whose estimates
+        feature drift invalidated, stalest first
+        (``fl.divergence.budget_pairs``); under ``'all'``: the naive
+        reference — every active pair not already measured this tick.
+        Re-estimates flow through the pool's ROW-TARGETED refresh path
+        and the ``update_divergences`` EMA merge: dirty/never-known
+        pairs replace outright (their old value measured a distribution
+        that no longer exists), clean pairs caught by 'all' mode
+        EMA-merge with ``div_ema``.  Returns (dirty count entering the
+        tick, pairs re-estimated).  No dirty pairs -> no work and no
+        PRNG consumption, which is what keeps pre-drift scenarios
+        golden-parity with this phase compiled in.
+
+        Refresh measurements use CONTENT-ADDRESSED PRNG keys — each
+        pair's key derives from its device ids (plus a per-run stream
+        and classifier init), not from its position in this tick's
+        batch — so an estimate is a deterministic function of (pair
+        identity, pair data): re-measuring an unchanged pair reproduces
+        its previous value, and WHEN the scheduler got to a pair never
+        changes WHAT was measured.  That makes refresh policies
+        (budgeted vs. exhaustive) differ only through genuine staleness,
+        which is what benchmarks/sim_drift.py measures."""
+        eng, st, cfg = self.engine, self.engine.state, self.engine.cfg
+        dirty = st.dirty_active_pairs()
+        if cfg.div_refresh == "all":
+            a = st.active_idx
+            ii, jj = np.triu_indices(len(a), k=1)
+            pairs = np.stack([a[ii], a[jj]], axis=1).astype(np.int32)
+            if len(pairs):                   # already measured this tick
+                pairs = pairs[st.div_tick[pairs[:, 0], pairs[:, 1]] < t]
+        else:
+            budget = len(st.active_idx) if cfg.div_budget < 0 \
+                else cfg.div_budget
+            pairs = budget_pairs(dirty, st.div_tick, budget)
+        if len(pairs) == 0:
+            return len(dirty), 0
+        pi, pj = pairs[:, 0], pairs[:, 1]
+        ema = np.where(
+            np.logical_and(st.div_known[pi, pj], ~st.div_dirty[pi, pj]),
+            cfg.div_ema, 0.0)
+        st.div_hat = eng.pool.refresh_divergences(
+            st.div_hat, st.clients, None, pairs, ema=ema,
+            keys=self._pair_content_keys(pairs), h0=self._refresh_h0())
+        st.mark_pairs_estimated(pairs, t)
+        return len(dirty), len(pairs)
+
+    def _measure_kwargs(self, pairs) -> dict:
+        """keys/h0 override for the mode's own measurement phases
+        (bootstrap, gossip): empty under the historical 'positional'
+        addressing, the content-addressed stream under 'content' — so
+        flipping ``div_key_mode`` re-keys EVERY Algorithm-1 measurement
+        consistently and re-measuring unchanged data becomes an exact
+        no-op across bootstrap/gossip/refresh alike."""
+        if self.engine.cfg.div_key_mode != "content":
+            return {}
+        return dict(keys=self._pair_content_keys(np.asarray(pairs)),
+                    h0=self._refresh_h0())
+
+    def _pair_content_keys(self, pairs: np.ndarray):
+        """(K, key_dim) content-addressed keys:
+        ``fold_in(fold_in(refresh_stream, min(i, j)), max(i, j))`` —
+        symmetric in the pair, independent of batch composition."""
+        base = jax.random.fold_in(
+            jax.random.PRNGKey(self.engine.cfg.seed), 2 ** 20)
+        lo = np.minimum(pairs[:, 0], pairs[:, 1])
+        hi = np.maximum(pairs[:, 0], pairs[:, 1])
+        return jax.vmap(lambda i, j: jax.random.fold_in(
+            jax.random.fold_in(base, i), j))(jnp.asarray(lo),
+                                             jnp.asarray(hi))
+
+    def _refresh_h0(self):
+        """The per-run shared classifier init of the refresh stream
+        (fixed so refresh measurements are content-addressed; cached —
+        it is the same tree every tick)."""
+        if not hasattr(self, "_refresh_h0_cache"):
+            from repro.fl import cnn
+            self._refresh_h0_cache = cnn.cnn_init(
+                jax.random.fold_in(
+                    jax.random.PRNGKey(self.engine.cfg.seed), 2 ** 21),
+                num_classes=2)
+        return self._refresh_h0_cache
+
     def _run_solve(self, a: np.ndarray, t: int):
         """Warm-started re-solve + installation.  Returns
         (warm, outer_iters, solve wall seconds)."""
@@ -147,7 +245,8 @@ class Executor:
 
     def _emit(self, *, t, t0, a, acc, events, resolved, warm,
               solver_iters, solver_wall, drift, energy, transmissions,
-              churn, solve_age, reason, **extras):
+              churn, solve_age, reason, n_dirty_pairs=0,
+              n_reestimated=0, **extras):
         """Build + log the tick's RoundRecord from the shared fields;
         mode-specific fields come in through ``extras``.  Returns
         (logged row, record)."""
@@ -155,6 +254,8 @@ class Executor:
         src = a[st.psi[a] == 0.0]
         tgt = a[st.psi[a] == 1.0]
         eng._energy_cum += energy
+        n_drifted = sum(1 for e in events
+                        if e.get("event") == "feature_drift")
         record = RoundRecord(
             round=t, scenario=cfg.scenario, n_active=len(a),
             n_sources=len(src), n_targets=len(tgt),
@@ -172,7 +273,9 @@ class Executor:
             link_churn=float(churn), events=events,
             wall_time_s=time.time() - t0,
             engine=self.name, solve_age=int(solve_age),
-            resolve_reason=reason, **extras)
+            resolve_reason=reason, n_drifted=int(n_drifted),
+            n_dirty_pairs=int(n_dirty_pairs),
+            n_reestimated=int(n_reestimated), **extras)
         row = eng.logger.log(record)
         st.round = t + 1
         return row, record
@@ -194,14 +297,18 @@ class SyncExecutor(Executor):
         st.eps_hat = np.asarray(eps, float)
         st.own_acc = np.asarray(acc, float)
 
-        # 3. incremental divergence refresh
+        # 3. incremental divergence refresh: never-estimated pairs run
+        # the full-pool path (a bootstrap spans everyone) ...
         pairs = st.unknown_active_pairs()
         if len(pairs):
             k_div = jax.random.fold_in(k_round, 1)
             st.div_hat = eng.pool.update_divergences(
-                st.div_hat, st.clients, k_div, pairs)
-            for i, j in pairs:
-                st.div_known[i, j] = st.div_known[j, i] = True
+                st.div_hat, st.clients, k_div, pairs,
+                **self._measure_kwargs(pairs))
+            st.mark_pairs_estimated(pairs, t)
+        # ... then the budgeted drift-aware re-estimation of dirtied
+        # pairs through the row-targeted refresh path
+        n_dirty, n_reest = self._refresh_dirty(t)
 
         # 4. drift-gated warm re-solve
         a = st.active_idx
@@ -227,6 +334,7 @@ class SyncExecutor(Executor):
             transmissions=st.energy.transmissions(
                 st.alpha, thresh=cfg.link_thresh),
             churn=churn, solve_age=solve_age, reason=reason,
+            n_dirty_pairs=n_dirty, n_reestimated=n_reest,
             n_trained=int(np.sum(st.labeled_devices[a])))
         if cfg.verbose:
             print(f"[sim] round {t}: active={len(a)} "
@@ -312,18 +420,23 @@ class AsyncGossipExecutor(Executor):
                     break
         return pairs
 
-    def _gossip_divergences(self, pairs, k_round):
+    def _gossip_divergences(self, pairs, k_round, t):
         """Pair-incremental Algorithm-1 refresh for this tick's meetings.
-        Known pairs EMA-merge the fresh estimate (cfg.div_ema on the old
-        value); never-estimated pairs take it outright."""
+        Known CLEAN pairs EMA-merge the fresh estimate (cfg.div_ema on
+        the old value — two measurements of the same distributions);
+        never-estimated pairs, and pairs feature drift dirtied, take it
+        outright (their old value has nothing left to say)."""
         st, cfg = self.engine.state, self.engine.cfg
         parr = np.asarray(pairs, np.int32)
         pi, pj = parr[:, 0], parr[:, 1]
-        ema = np.where(st.div_known[pi, pj], cfg.div_ema, 0.0)
+        ema = np.where(
+            np.logical_and(st.div_known[pi, pj], ~st.div_dirty[pi, pj]),
+            cfg.div_ema, 0.0)
         k_div = jax.random.fold_in(k_round, 1)
         st.div_hat = self.engine.pool.update_divergences(
-            st.div_hat, st.clients, k_div, parr, ema=ema)
-        st.div_known[pi, pj] = st.div_known[pj, pi] = True
+            st.div_hat, st.clients, k_div, parr, ema=ema,
+            **self._measure_kwargs(parr))
+        st.mark_pairs_estimated(parr, t)
 
     def _gossip_models(self, pairs) -> Tuple[np.ndarray, int]:
         """Model exchange along solved links: inside each meeting pair,
@@ -381,12 +494,14 @@ class AsyncGossipExecutor(Executor):
         t_idx = np.flatnonzero(np.logical_and(elig, st.labeled_devices))
         st.clocks.mark_trained(t_idx, t)
 
-        # 3. gossip: pairwise divergence refresh + model exchange
+        # 3. gossip: pairwise divergence refresh + model exchange, then
+        # the budgeted drift-aware re-estimation (row-targeted path)
         a = st.active_idx
         pairs = self._select_pairs(a)
         if pairs:
-            self._gossip_divergences(pairs, k_round)
+            self._gossip_divergences(pairs, k_round, t)
         used, n_exchanges = self._gossip_models(pairs)
+        n_dirty, n_reest = self._refresh_dirty(t)
 
         # 4. drift + staleness gated warm re-solve
         drift = eng._drift_metric()
@@ -411,6 +526,7 @@ class AsyncGossipExecutor(Executor):
             energy=st.energy.energy(used),
             transmissions=n_exchanges, churn=churn,
             solve_age=solve_age, reason=reason,
+            n_dirty_pairs=n_dirty, n_reestimated=n_reest,
             n_trained=len(t_idx), trained=[int(i) for i in t_idx],
             gossip=[[int(i), int(j)] for i, j in pairs],
             gossip_topology=cfg.gossip_topology,

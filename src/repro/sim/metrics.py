@@ -49,6 +49,21 @@ their defaults under sync):
   resolve_reason   str?   why the gate fired: cold | membership | drift
                           | staleness (async staleness bound); null when
                           no re-solve ran
+
+Feature-drift / dirty-pair fields (added with the drift-aware budgeted
+re-estimation; all 0 on ticks where nothing drifts, so pre-drift
+scenarios read exactly as before):
+  n_drifted        int    devices whose features drifted this tick
+                          (feature_drift scenario events)
+  n_dirty_pairs    int    active pairs flagged dirty entering the
+                          refresh phase (estimates invalidated by drift,
+                          not yet re-measured)
+  n_reestimated    int    pairs the budgeted refresh re-measured this
+                          tick (<= div_budget under div_refresh='dirty')
+
+The authoritative field-by-field reference, including which fields are
+nondeterministic, lives in docs/metrics-schema.md (CI checks every
+RoundRecord field is documented there).
 """
 from __future__ import annotations
 
@@ -91,6 +106,10 @@ class RoundRecord:
     max_staleness: float = -1.0
     solve_age: int = -1
     resolve_reason: Optional[str] = None
+    # feature-drift / dirty-pair fields (0 when nothing drifts)
+    n_drifted: int = 0
+    n_dirty_pairs: int = 0
+    n_reestimated: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

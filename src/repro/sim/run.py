@@ -46,6 +46,28 @@ def build_parser() -> argparse.ArgumentParser:
                    help="Algorithm-1 exchange rounds per estimate")
     p.add_argument("--div-T", type=int, default=8,
                    help="Algorithm-1 local iterations per exchange")
+    p.add_argument("--div-refresh", default="dirty",
+                   choices=("dirty", "all"),
+                   help="drift re-estimation policy: budgeted dirty-pair "
+                        "tracking (default) or the naive all-active-pairs "
+                        "refresh every round (the benchmark reference)")
+    p.add_argument("--div-budget", type=int, default=-1,
+                   help="max dirty pairs re-estimated per tick; "
+                        "-1: n_active, 0: unbounded")
+    p.add_argument("--div-key-mode", default="positional",
+                   choices=("positional", "content"),
+                   help="Algorithm-1 PRNG addressing: positional "
+                        "(historical) or content — estimates become a "
+                        "deterministic function of (pair, data)")
+    p.add_argument("--drift-frac", type=float, default=0.5,
+                   help="feature-drift: fraction of devices designated "
+                        "as drifters")
+    p.add_argument("--drift-p", type=float, default=0.3,
+                   help="feature-drift: per-drifter per-tick drift "
+                        "probability")
+    p.add_argument("--drift-step", type=float, default=0.15,
+                   help="feature-drift: domain-mix increment per drift "
+                        "step")
     p.add_argument("--batch", type=int, default=10)
     p.add_argument("--lr", type=float, default=0.01)
     p.add_argument("--threshold", type=float, default=0.05,
@@ -97,7 +119,11 @@ def main(argv=None) -> int:
         scenario=args.scenario, engine=args.engine, devices=args.devices,
         rounds=args.rounds, seed=args.seed, setting=args.setting,
         samples_per_device=args.samples, train_iters=args.train_iters,
-        div_tau=args.div_tau, div_T=args.div_T, batch=args.batch,
+        div_tau=args.div_tau, div_T=args.div_T,
+        div_refresh=args.div_refresh, div_budget=args.div_budget,
+        div_key_mode=args.div_key_mode,
+        feature_drift_frac=args.drift_frac, feature_drift_p=args.drift_p,
+        feature_drift_step=args.drift_step, batch=args.batch,
         lr=args.lr, resolve_threshold=args.threshold,
         link_thresh=args.link_thresh,
         reseed_on_rejoin=not args.no_reseed,
@@ -139,6 +165,15 @@ def main(argv=None) -> int:
               f"{meetings} gossip meetings, "
               f"{stale_resolves} staleness-triggered re-solves, "
               f"mean staleness {stale_mean:.2f}")
+    drifted = sum(r["n_drifted"] for r in rows)
+    if drifted:
+        reest = sum(r["n_reestimated"] for r in rows)
+        drift_resolves = sum(r["resolve_reason"] == "drift" for r in rows)
+        print(f"[sim] drift: {drifted} feature-drift events, "
+              f"{reest} pair re-estimates "
+              f"({reest / max(len(rows), 1):.1f}/tick), "
+              f"{drift_resolves} drift-triggered re-solves, "
+              f"{rows[-1]['n_dirty_pairs']} dirty pairs at last tick")
     if tgt:
         print(f"[sim] target accuracy: first={tgt[0]:.3f} "
               f"last={tgt[-1]:.3f}; total energy "

@@ -1,8 +1,9 @@
 """Scenario registry: named time-evolution processes for the network.
 
 A scenario mutates the engine's NetworkState once per round through the
-engine's mutation API (drift_channels / set_active / reveal_labels) and
-returns a list of event dicts that land in the round's metrics record.
+engine's mutation API (drift_channels / set_active / reveal_labels /
+set_tick_period / drift_features) and returns a list of event dicts
+that land in the round's metrics record.
 
 Registered scenarios:
   static        nothing changes — the multi-round control
@@ -15,6 +16,13 @@ Registered scenarios:
                 periods are occasionally re-drawn; no data/channel change
   stragglers    a fixed fraction of devices runs on a much slower clock;
                 the straggler set slowly rotates
+  feature-drift a designated subset of devices' FEATURE distributions
+                slide toward a foreign domain over time (domain
+                interpolation), dirtying their Algorithm-1 pairs for the
+                executors' budgeted re-estimation
+  feature-drift-async
+                feature-drift + occasional clock re-draws — the domain
+                shift regime under the async executor
 
 The clock scenarios mutate device tick rates through
 ``engine.set_tick_period`` and are only meaningful under
@@ -116,6 +124,24 @@ class DeviceChurn(Scenario):
         return events
 
 
+def _maybe_retick(scenario: "Scenario", engine, p: float) -> List[dict]:
+    """Shared clock-redraw block (async-gossip + feature-drift-async):
+    with probability ``p``, re-draw one active device's clock period
+    from the configured set.  The leading ``random()`` is drawn
+    UNCONDITIONALLY so the scenario's rng stream is engine-agnostic
+    (under sync there are no clocks and the draw is simply discarded)."""
+    st = engine.state
+    r = scenario.rng.random()
+    if st.clocks is None or r >= p:
+        return []
+    a = st.active_idx
+    dev = int(a[scenario.rng.integers(len(a))])
+    period = int(scenario.rng.choice(
+        np.asarray(list(scenario.cfg.tick_periods), int)))
+    engine.set_tick_period(dev, period)
+    return [{"event": "retick", "device": dev, "period": period}]
+
+
 @register("async-gossip")
 class AsyncGossip(Scenario):
     """Clock-drift control for the async-gossip executor: no exogenous
@@ -128,16 +154,7 @@ class AsyncGossip(Scenario):
         self.p = getattr(cfg, "retick_p", 0.1)
 
     def step(self, engine, t):
-        st = engine.state
-        r = self.rng.random()           # drawn unconditionally: the rng
-        if st.clocks is None or r >= self.p:   # stream is engine-agnostic
-            return []
-        a = st.active_idx
-        dev = int(a[self.rng.integers(len(a))])
-        period = int(self.rng.choice(
-            np.asarray(list(self.cfg.tick_periods), int)))
-        engine.set_tick_period(dev, period)
-        return [{"event": "retick", "device": dev, "period": period}]
+        return _maybe_retick(self, engine, self.p)
 
 
 @register("stragglers")
@@ -189,6 +206,68 @@ class Stragglers(Scenario):
                 self._straggle(engine, slow)
                 events.append({"event": "straggle", "device": slow,
                                "period": self.period})
+        return events
+
+
+@register("feature-drift")
+class FeatureDrift(Scenario):
+    """Domain shift over time (the regime of Yao et al. 2021 / FACT): a
+    ``feature_drift_frac`` subset of the initially-active devices is
+    designated as drifters at setup, and each tick each drifter's
+    domain mix advances by ``feature_drift_step`` with probability
+    ``feature_drift_p`` (absolute mix, clipped at 1.0 — a device ends
+    fully re-rendered in its alt domain).  Every drift step re-blends
+    the device's features through ``engine.drift_features``, which
+    dirties its Algorithm-1 pairs; the executors re-measure a budgeted
+    stalest-first subset each tick and the moved estimates drive
+    ``resolve_reason='drift'`` warm re-solves."""
+
+    def __init__(self, cfg, rng):
+        super().__init__(cfg, rng)
+        self.frac = getattr(cfg, "feature_drift_frac", 0.5)
+        self.p = getattr(cfg, "feature_drift_p", 0.3)
+        self.step_size = getattr(cfg, "feature_drift_step", 0.15)
+        self.mix: dict = {}              # drifter -> current absolute mix
+
+    def setup(self, engine):
+        a = engine.state.active_idx
+        k = max(1, int(round(self.frac * len(a))))
+        self.mix = {int(d): 0.0 for d in sorted(
+            int(i) for i in self.rng.choice(a, size=k, replace=False))}
+
+    def step(self, engine, t):
+        events: List[dict] = []
+        for d in self.mix:
+            # draw unconditionally so the event stream of the OTHER
+            # drifters is unaffected by one device leaving/saturating
+            r = self.rng.random()
+            if not engine.state.active[d] or self.mix[d] >= 1.0 \
+                    or r >= self.p:
+                continue
+            self.mix[d] = min(1.0, self.mix[d] + self.step_size)
+            domain = engine.drift_features(d, self.mix[d])
+            events.append({"event": "feature_drift", "device": d,
+                           "mix": round(self.mix[d], 6),
+                           "domain": domain})
+        return events
+
+
+@register("feature-drift-async")
+class FeatureDriftAsync(FeatureDrift):
+    """Feature drift under the async executor's world: the same domain
+    interpolation schedule, plus the ``async-gossip`` scenario's
+    occasional clock re-draws (``retick_p``) — so budgeted dirty-pair
+    re-estimation, gossip measurement, and heterogeneous clocks all
+    interact.  Degenerates to plain feature-drift under ``sync`` (no
+    clocks to mutate)."""
+
+    def __init__(self, cfg, rng):
+        super().__init__(cfg, rng)
+        self.retick_p = getattr(cfg, "retick_p", 0.1)
+
+    def step(self, engine, t):
+        events = super().step(engine, t)
+        events.extend(_maybe_retick(self, engine, self.retick_p))
         return events
 
 

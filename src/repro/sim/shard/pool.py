@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.fl.divergence import chunked_pair_lanes
+from repro.fl.divergence import (chunked_pair_lanes,
+                                 pairwise_divergence_values)
 from repro.fl.divergence import update_divergences as _update_divergences
 from repro.fl.transfer import apply_transfer
 from repro.sim.training import (mixed_accuracies, network_step,
@@ -65,6 +66,33 @@ def _bucket(n: int, cap: int) -> int:
     return min(w, cap)
 
 
+def _gather_pair_rows(clients, pi, pj, width_for):
+    """Row-targeted gather for a small pair subset: compact the client
+    arrays down to the UNIQUE device rows the pairs touch (padded to
+    ``width_for(n_rows)`` by repeating the first row, so bucketed widths
+    bound recompilation) and remap the pair indices into the compact
+    array.
+
+    Lanes are untouched — each pair still reads exactly its own two
+    devices' rows — so per-pair values are bitwise identical to staging
+    the full pool; only the data volume entering the computation (and,
+    sharded, crossing the interconnect) shrinks from P rows to the
+    handful a budgeted refresh names.  Returns (compact_clients, ri, rj)
+    with ri/rj int32 indices into the compact row axis."""
+    rows, inv = np.unique(np.concatenate([pi, pj]), return_inverse=True)
+    ri = inv[:len(pi)].astype(np.int32)
+    rj = inv[len(pi):].astype(np.int32)
+    width = width_for(len(rows))
+    if width < len(rows):
+        raise ValueError(f"width {width} < {len(rows)} gathered rows")
+    pad = width - len(rows)
+    if pad:
+        rows = np.concatenate([rows, np.full(pad, rows[0], rows.dtype)])
+    gather = jnp.asarray(rows)
+    sub = jax.tree_util.tree_map(lambda a: a[gather], clients)
+    return sub, ri, rj
+
+
 class DevicePool:
     """Backend API.  All methods take/return POOL-sized arrays; any
     padding or placement is internal to the backend."""
@@ -83,12 +111,30 @@ class DevicePool:
                     eps_prev, acc_prev):
         raise NotImplementedError
 
-    def update_divergences(self, div, clients, key, pairs, *, ema=0.0):
+    def update_divergences(self, div, clients, key, pairs, *, ema=0.0,
+                           keys=None, h0=None):
         cfg = self.engine.cfg
         return _update_divergences(
             div, clients, key, pairs, tau=cfg.div_tau, T=cfg.div_T,
             batch=cfg.batch, lr=cfg.lr, ema=ema,
-            values_fn=self._values_fn())
+            values_fn=self._values_fn(), keys=keys, h0=h0)
+
+    def refresh_divergences(self, div, clients, key, pairs, *, ema=0.0,
+                            keys=None, h0=None):
+        """Budgeted drift refresh: same contract as
+        ``update_divergences`` but executed through the ROW-TARGETED
+        values path — only the rows of the devices the pairs actually
+        touch are gathered/staged (the full path stages, and sharded
+        all-gathers, the whole pool to serve any pair).  Values are
+        bitwise identical; use this when the pair set is a small
+        targeted subset (a drift refresh), the full path when it spans
+        the pool (the bootstrap).  ``keys``/``h0`` forward the
+        content-addressed-key override (see estimate_divergences)."""
+        cfg = self.engine.cfg
+        return _update_divergences(
+            div, clients, key, pairs, tau=cfg.div_tau, T=cfg.div_T,
+            batch=cfg.batch, lr=cfg.lr, ema=ema,
+            values_fn=self._targeted_values_fn(), keys=keys, h0=h0)
 
     def transfer(self, params, alpha, psi):
         raise NotImplementedError
@@ -99,6 +145,10 @@ class DevicePool:
     def _values_fn(self):
         """Hook into fl.divergence.estimate_divergences; None = local."""
         return None
+
+    def _targeted_values_fn(self):
+        """Row-targeted variant of ``_values_fn`` (budgeted refreshes)."""
+        raise NotImplementedError
 
     # shared async merge: measurements refresh ONLY where a device ticked
     def _merge_measured(self, g, eps_g, acc_g, eps_prev, acc_prev):
@@ -168,6 +218,28 @@ class LocalPool(DevicePool):
 
     def accuracies(self, params, clients):
         return mixed_accuracies(params, clients)
+
+    def _targeted_values_fn(self):
+        """Single-host row targeting: one bucketed row gather for the
+        whole pair batch (the compact clients replace the full (P,
+        n_max, ...) stack inside the vmapped pair kernel), pair lanes
+        padded to a power-of-two width so compilations stay bounded as
+        the dirty count wanders under the budget."""
+        def values(h0, clients, pi, pj, keys, *, tau, T, batch, lr):
+            sub, ri, rj = _gather_pair_rows(
+                clients, pi, pj,
+                lambda r: _bucket(r, clients.n_devices))
+
+            def call(ci, cj, ck):
+                return pairwise_divergence_values(
+                    h0, sub, jnp.asarray(ci, jnp.int32),
+                    jnp.asarray(cj, jnp.int32), ck,
+                    tau=tau, T=T, batch=batch, lr=lr)
+
+            return chunked_pair_lanes(ri, rj, keys,
+                                      _bucket(len(ri), PAIR_CHUNK),
+                                      call, pad_partial=True)
+        return values
 
 
 class ShardedPool(DevicePool):
@@ -252,6 +324,29 @@ class ShardedPool(DevicePool):
                                      jnp.asarray(cj, jnp.int32), ck)
 
             return chunked_pair_lanes(pi, pj, keys, w * self.n_shards,
+                                      call, pad_partial=True)
+        return values
+
+    def _targeted_values_fn(self):
+        """Sharded row targeting: the compact row set (bucketed, padded
+        to a shard multiple) is what gets device-sharded and
+        ALL-GATHERED inside ``build_pair_values`` — the cross-shard
+        gather shrinks from the whole padded pool to just the rows this
+        refresh touches, which is the row-targeted-gather headroom noted
+        when the sharding PR closed."""
+        def values(h0, clients, pi, pj, keys, *, tau, T, batch, lr):
+            del tau, T, batch, lr           # baked into _pair_fn at init
+            sub, ri, rj = _gather_pair_rows(
+                clients, pi, pj,
+                lambda r: -(-_bucket(r, clients.n_devices)
+                            // self.n_shards) * self.n_shards)
+            w = min(PAIR_CHUNK, -(-len(ri) // self.n_shards))
+
+            def call(ci, cj, ck):
+                return self._pair_fn(h0, sub, jnp.asarray(ci, jnp.int32),
+                                     jnp.asarray(cj, jnp.int32), ck)
+
+            return chunked_pair_lanes(ri, rj, keys, w * self.n_shards,
                                       call, pad_partial=True)
         return values
 

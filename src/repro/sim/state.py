@@ -37,6 +37,14 @@ class NetworkState:
     alpha: np.ndarray               # (P, P)
     solver: Optional[SolverResult] = None
     solve_active: Optional[np.ndarray] = None   # active idx at last solve
+    # drift-aware staleness tracking over div_hat (both arrays symmetric,
+    # maintained by the executors' refresh phases + engine.drift_features)
+    #: (P, P) bool: pair's estimate invalidated by feature drift and not
+    #: yet re-measured — candidates of the budgeted top-K refresh
+    div_dirty: Optional[np.ndarray] = None
+    #: (P, P) int: tick the pair was last estimated (-1: never) — the
+    #: staleness rank the budgeted refresh orders dirty pairs by
+    div_tick: Optional[np.ndarray] = None
     #: heterogeneous local clocks (async-gossip executor; None under sync)
     clocks: Optional[DeviceClocks] = None
     # measurement snapshot at the last solve (drift reference)
@@ -65,3 +73,33 @@ class NetworkState:
         out = [(i, j) for ii, i in enumerate(a) for j in a[ii + 1:]
                if not self.div_known[i, j]]
         return np.asarray(out, np.int32).reshape(-1, 2)
+
+    # ------------------------------------------- dirty-pair bookkeeping
+    def mark_pairs_dirty(self, device: int):
+        """Feature drift on ``device`` invalidates every Algorithm-1
+        estimate involving it: flag the device's full row+column (not
+        just currently-active partners — an inactive partner's stale
+        estimate must still read as dirty when it rejoins)."""
+        self.div_dirty[device, :] = True
+        self.div_dirty[:, device] = True
+        self.div_dirty[device, device] = False
+
+    def dirty_active_pairs(self) -> np.ndarray:
+        """(M, 2) upper-triangle ACTIVE pairs currently flagged dirty —
+        the candidate set the budgeted refresh ranks by staleness."""
+        a = self.active_idx
+        sub = self.div_dirty[np.ix_(a, a)]
+        ii, jj = np.nonzero(np.triu(sub, k=1))
+        return np.stack([a[ii], a[jj]], axis=1).astype(np.int32) \
+            if len(ii) else np.zeros((0, 2), np.int32)
+
+    def mark_pairs_estimated(self, pairs: np.ndarray, t: int):
+        """Record that ``pairs`` were (re-)measured on tick ``t``:
+        known, clean, and freshly stamped (symmetric)."""
+        pairs = np.atleast_2d(np.asarray(pairs, np.int32))
+        if pairs.size == 0:
+            return
+        pi, pj = pairs[:, 0], pairs[:, 1]
+        self.div_known[pi, pj] = self.div_known[pj, pi] = True
+        self.div_dirty[pi, pj] = self.div_dirty[pj, pi] = False
+        self.div_tick[pi, pj] = self.div_tick[pj, pi] = t

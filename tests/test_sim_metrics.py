@@ -22,7 +22,8 @@ def _record(t=0, **kw):
         wall_time_s=1.5, engine="async-gossip", n_trained=5,
         trained=[0, 1, 2, 5, 7], gossip=[[0, 3], [2, 6]],
         mean_staleness=1.25, max_staleness=4.0, solve_age=9,
-        resolve_reason="staleness")
+        resolve_reason="staleness", n_drifted=2, n_dirty_pairs=9,
+        n_reestimated=4)
     base.update(kw)
     return RoundRecord(**base)
 
@@ -43,6 +44,8 @@ def test_roundrecord_jsonl_roundtrip(tmp_path):
     assert back == rows
     assert back[0]["gossip"] == [[0, 3], [2, 6]]
     assert back[0]["resolve_reason"] == "staleness"
+    assert back[0]["n_drifted"] == 2
+    assert back[0]["n_dirty_pairs"] == 9 and back[0]["n_reestimated"] == 4
     stripped = strip_nondeterministic(back)
     for row in stripped:
         assert "wall_time_s" not in row and "solver_wall_s" not in row
