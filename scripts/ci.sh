@@ -61,6 +61,56 @@ python -m repro.sim.run --mesh 8 --engine async-gossip \
 XLA_FLAGS="$MESH_FLAGS${XLA_FLAGS:+ $XLA_FLAGS}" \
 python -m benchmarks.sim_scale --ci
 
+# kill-and-resume gate: run to completion for a reference, then the same
+# config checkpointed + SIGKILLed mid-run (--kill-after hard-kills the
+# process right after the round-3 checkpoint commits), resumed, and the
+# stitched log diffed field-for-field against the uninterrupted one
+RESUME_ARGS=(--scenario device-churn --devices 6 --rounds 6 --samples 40
+    --train-iters 8 --div-T 6 --solver-max-outer 3
+    --solver-inner-steps 200 --quiet)
+python -m repro.sim.run "${RESUME_ARGS[@]}" \
+    --out results/sim/ci_resume_ref.jsonl
+rm -rf results/sim/ci_resume.jsonl.ckpt
+if python -m repro.sim.run "${RESUME_ARGS[@]}" \
+    --out results/sim/ci_resume.jsonl --checkpoint-every 3 --kill-after 2
+then
+    echo "ci.sh: --kill-after did not kill the run" >&2; exit 1
+elif [ $? -ne 137 ]; then
+    echo "ci.sh: expected SIGKILL exit 137 from --kill-after" >&2; exit 1
+fi
+python -m repro.sim.run "${RESUME_ARGS[@]}" \
+    --out results/sim/ci_resume.jsonl --checkpoint-every 3 --resume
+python - <<'PY'
+from repro.sim.metrics import read_jsonl, strip_nondeterministic
+import json
+ref = strip_nondeterministic(read_jsonl("results/sim/ci_resume_ref.jsonl"))
+res = strip_nondeterministic(read_jsonl("results/sim/ci_resume.jsonl"))
+assert json.dumps(ref, sort_keys=True) == json.dumps(res, sort_keys=True), \
+    "resumed run diverged from the uninterrupted reference"
+print(f"ci.sh: kill-and-resume OK ({len(res)} rounds, field-for-field)")
+PY
+
+# shard-failure recovery smoke: fault injection on the emulated 8-device
+# mesh — shard losses must be detected and recovered (churn/reseed), not
+# fatal, and the run must complete with recoveries on record
+XLA_FLAGS="$MESH_FLAGS${XLA_FLAGS:+ $XLA_FLAGS}" \
+python -m repro.sim.run --mesh 8 --scenario faulty --devices 8 \
+    --rounds 4 --samples 40 --train-iters 8 --div-T 6 \
+    --solver-max-outer 3 --solver-inner-steps 200 --seed 4 \
+    --fault-shard-p 0.7 --fault-crash-p 0.0 \
+    --quiet --out "results/sim/ci_faulty_mesh.jsonl"
+python - <<'PY'
+from repro.sim.metrics import read_jsonl
+rows = read_jsonl("results/sim/ci_faulty_mesh.jsonl")
+assert len(rows) == 4, "faulty mesh run did not complete"
+faults = sum(r["n_faults"] for r in rows)
+recovered = sum(r["n_recovered"] for r in rows)
+assert faults > 0, "fault injector injected nothing at fault_shard_p=0.7"
+assert recovered > 0, "shard losses were never recovered"
+print(f"ci.sh: shard-failure recovery OK "
+      f"({faults} faults, {recovered} devices recovered)")
+PY
+
 # sync determinism gate: same seed twice -> identical deterministic fields
 # (golden-file parity vs the pre-refactor engine runs in the pytest suite)
 python - <<'PY'

@@ -1,2 +1,5 @@
-from repro.checkpoint.store import save_checkpoint, restore_checkpoint, \
-    latest_step  # noqa: F401
+from repro.checkpoint.store import (CheckpointCorruptError,  # noqa: F401
+                                    available_steps, gc_checkpoints,
+                                    latest_step, load_arrays,
+                                    load_metadata, restore_checkpoint,
+                                    save_checkpoint)

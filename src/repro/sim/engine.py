@@ -25,6 +25,8 @@ them share:
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
 from typing import List, Optional, Tuple
 
 import jax
@@ -161,21 +163,101 @@ class SimConfig:
     straggler_frac: float = 0.25
     straggler_period: int = 8
     straggler_p_swap: float = 0.1
+    # ---- checkpoint / resume (repro.sim.snapshot over repro.checkpoint)
+    #: crash-consistent snapshot cadence in rounds (None disables; when
+    #: set it must be >= 1 and ``ckpt_dir`` must be set too)
+    checkpoint_every: Optional[int] = None
+    #: directory the run checkpoints live in
+    ckpt_dir: Optional[str] = None
+    #: retention: keep the newest k checkpoints, gc the rest
+    ckpt_keep: int = 3
+    #: continue from the latest readable checkpoint in ``ckpt_dir``
+    #: instead of starting at round 0 (bit-for-bit: the resumed
+    #: trajectory reproduces the uninterrupted one field-for-field,
+    #: modulo the documented provenance/wall-clock fields)
+    resume: bool = False
+    #: crash-injection test hook: SIGKILL our own process immediately
+    #: after completing (and checkpointing) this round — a REAL hard
+    #: kill, no cleanup handlers run (-1 disables; used by the CI
+    #: kill-and-resume gate and tests/test_sim_resume.py)
+    kill_after: int = -1
+    # ---- fault injection (repro.sim.faults; active under the 'faulty'
+    # ---- scenario, which installs a FaultInjector on the engine)
+    #: seed of the fault schedule's own PRNG stream (-1: seed + 5)
+    fault_seed: int = -1
+    #: per-tick probability one active device crashes (rejoining
+    #: ``fault_rejoin_after`` ticks later through the churn/reseed path)
+    fault_crash_p: float = 0.15
+    #: outage length of a crashed device, in ticks
+    fault_rejoin_after: int = 2
+    #: per-tick probability one pool shard is lost (ShardedPool runs;
+    #: the pool detects it and recovers the shard's devices)
+    fault_shard_p: float = 0.1
+    #: per-tick probability the next pool op suffers 1..fault_retries
+    #: transient failures before succeeding
+    fault_op_p: float = 0.2
+    #: per-exchange probability an async gossip model transfer is lost
+    fault_gossip_drop_p: float = 0.15
+    #: bounded-retry budget for transient pool-op failures
+    fault_retries: int = 3
+    #: base of the exponential retry backoff, seconds (0: no sleeping)
+    fault_backoff_s: float = 0.0
     log_path: Optional[str] = None
     verbose: bool = False
+
+    def __post_init__(self):
+        """Reject impossible configurations at CONSTRUCTION, with
+        actionable messages — not ticks later inside a jitted phase."""
+        if self.devices < 1:
+            raise ValueError(f"devices must be >= 1, got {self.devices}")
+        if self.rounds < 0:
+            raise ValueError(f"rounds must be >= 0, got {self.rounds}")
+        if self.div_budget < -1:
+            raise ValueError(
+                f"div_budget must be -1 (n_active), 0 (unbounded) or "
+                f"positive, got {self.div_budget}")
+        if self.div_refresh not in ("dirty", "all"):
+            raise ValueError(
+                f"unknown div_refresh {self.div_refresh!r}; "
+                "available: dirty, all")
+        if self.div_key_mode not in ("positional", "content"):
+            raise ValueError(
+                f"unknown div_key_mode {self.div_key_mode!r}; "
+                "available: positional, content")
+        if self.gossip_topology not in ("uniform", "ring", "k-regular"):
+            raise ValueError(
+                f"unknown gossip_topology {self.gossip_topology!r}; "
+                "available: uniform, ring, k-regular")
+        if self.checkpoint_every is not None:
+            if self.checkpoint_every <= 0:
+                raise ValueError(
+                    f"checkpoint_every must be >= 1 round, got "
+                    f"{self.checkpoint_every} (omit it to disable "
+                    f"checkpointing)")
+            if not self.ckpt_dir:
+                raise ValueError(
+                    "checkpoint_every is set but ckpt_dir is not — "
+                    "checkpoints need a directory to live in")
+        if self.resume and not self.ckpt_dir:
+            raise ValueError(
+                "resume=True needs ckpt_dir pointing at the "
+                "interrupted run's checkpoint directory")
+        if self.ckpt_keep < 1:
+            raise ValueError(f"ckpt_keep must be >= 1, got "
+                             f"{self.ckpt_keep}")
+        for knob in ("fault_crash_p", "fault_shard_p", "fault_op_p",
+                     "fault_gossip_drop_p"):
+            p = getattr(self, knob)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{knob} is a probability, got {p}")
+        if self.fault_retries < 0:
+            raise ValueError(f"fault_retries must be >= 0, got "
+                             f"{self.fault_retries}")
 
 
 class SimulationEngine:
     def __init__(self, cfg: SimConfig):
         self.cfg = cfg
-        if cfg.div_refresh not in ("dirty", "all"):
-            raise ValueError(
-                f"unknown div_refresh {cfg.div_refresh!r}; "
-                "available: dirty, all")
-        if cfg.div_key_mode not in ("positional", "content"):
-            raise ValueError(
-                f"unknown div_key_mode {cfg.div_key_mode!r}; "
-                "available: positional, content")
         scen_cls = get_scenario(cfg.scenario)
         self.rng = np.random.default_rng(cfg.seed)
         self.scenario = scen_cls(cfg, np.random.default_rng(cfg.seed + 1))
@@ -206,7 +288,6 @@ class SimulationEngine:
             div_tick=np.full((p, p), -1, int),
             energy=EnergyModel.sample(p, np.random.default_rng(cfg.seed)),
             psi=np.zeros(p), alpha=np.zeros((p, p)))
-        self.logger = MetricsLogger(cfg.log_path)
         self._restack = False
         self._membership_dirty = False
         self._prev_links: set = set()
@@ -217,10 +298,26 @@ class SimulationEngine:
         self._drift_base: dict = {}
         self._drift_alt: dict = {}
         self._drift_domain: dict = {}
+        #: FaultInjector, installed by the 'faulty' scenario's setup;
+        #: None on fault-free runs (executors/pools consult this)
+        self.faults = None
+        #: how many times this run has been resumed from a checkpoint
+        self._resume_count = 0
         self.pool = make_pool(self)
         self.executor = get_executor(cfg.engine)(self)
         self.executor.setup()
         self.scenario.setup(self)
+        resumed = False
+        if cfg.resume:
+            from repro.sim.snapshot import restore_run
+            restore_run(self)                # raises if nothing to resume
+            resumed = True
+        # the logger comes LAST: on resume it reconciles the existing
+        # JSONL (drops rows the resumed engine will re-execute, keeps
+        # the trustworthy prefix) instead of truncating it
+        self.logger = MetricsLogger(
+            cfg.log_path,
+            resume_round=self.state.round if resumed else None)
 
     # ------------------------------------------------- scenario mutation API
     def drift_channels(self, rng: np.random.Generator, sigma: float):
@@ -319,6 +416,28 @@ class SimulationEngine:
             lambda p: p.at[j].set(
                 jnp.einsum("s,s...->...", wj.astype(p.dtype), p)),
             st.params)
+
+    def _recover_devices(self, devices, shard: Optional[int] = None):
+        """Lost-shard recovery: a dead shard's devices re-enter through
+        the existing churn path — each is deactivated then immediately
+        re-activated, so ``reseed_on_rejoin`` re-seeds its params from
+        the solved source mixture exactly as a churn rejoin would (the
+        shard's training state is what the failure destroyed).  The
+        membership flip also marks the assignment dirty, so the gate
+        re-solves with ``resolve_reason='membership'`` instead of
+        trusting a solution computed for devices that just lost their
+        state."""
+        devices = [int(d) for d in devices]
+        for d in devices:
+            self.set_active(d, False)
+        for d in devices:
+            self.set_active(d, True)
+        if self.faults is not None:
+            self.faults.n_recovered += len(devices)
+        if self.cfg.verbose and devices:
+            where = f"shard {shard}" if shard is not None else "pool"
+            print(f"[sim] recovered {len(devices)} devices from lost "
+                  f"{where}: {devices}")
 
     def _drift_metric(self) -> float:
         st = self.state
@@ -431,10 +550,40 @@ class SimulationEngine:
     def step(self, t: int) -> dict:
         return self.executor.step(t)
 
+    def _maybe_checkpoint(self, step: int):
+        """Crash-consistent snapshot after round ``step - 1`` completed
+        (``step`` is the next round to execute — what a resume starts
+        at).  Cadence is ``checkpoint_every``; retention is
+        ``ckpt_keep`` newest."""
+        cfg = self.cfg
+        if cfg.checkpoint_every is None:
+            return
+        if step % cfg.checkpoint_every != 0 and step != cfg.rounds:
+            return
+        from repro.checkpoint import gc_checkpoints
+        from repro.sim.snapshot import save_run
+        save_run(self, step)
+        gc_checkpoints(cfg.ckpt_dir, keep=cfg.ckpt_keep)
+        if cfg.verbose:
+            print(f"[sim] checkpointed step {step} -> {cfg.ckpt_dir}")
+
     def run(self) -> List[dict]:
+        """Execute rounds ``state.round .. rounds-1`` (``state.round`` is
+        0 on a fresh run, the restored step on ``--resume``), taking a
+        crash-consistent checkpoint every ``checkpoint_every`` completed
+        rounds.  A checkpoint at step k means "rounds < k are done and
+        logged"; the resume path re-executes from k bit-for-bit."""
+        cfg = self.cfg
         try:
-            for t in range(self.cfg.rounds):
+            for t in range(self.state.round, cfg.rounds):
                 self.step(t)
+                self.state.round = t + 1
+                self._maybe_checkpoint(t + 1)
+                if cfg.kill_after >= 0 and t == cfg.kill_after:
+                    # crash-injection hook: a REAL hard kill — no
+                    # finally blocks, no atexit, no flushing beyond
+                    # what already fsynced (tests + CI resume gate)
+                    os.kill(os.getpid(), signal.SIGKILL)
         finally:
             self.logger.close()
         return self.logger.records

@@ -103,6 +103,15 @@ class Executor:
     def step(self, t: int) -> dict:
         raise NotImplementedError
 
+    # ---------------------------------------------- checkpoint support
+    def state_dict(self) -> dict:
+        """Executor-owned mutable state for run checkpoints (sync: none
+        — its control flow is a pure function of engine state + tick)."""
+        return {}
+
+    def load_state_dict(self, state: dict):
+        pass
+
     # --------------------------------------------------- shared phases
     def _begin(self, t: int):
         """Phase 1: scenario mutation (+ restack after label reveals).
@@ -256,6 +265,8 @@ class Executor:
         eng._energy_cum += energy
         n_drifted = sum(1 for e in events
                         if e.get("event") == "feature_drift")
+        n_faults = eng.faults.n_faults if eng.faults is not None else 0
+        n_recov = eng.faults.n_recovered if eng.faults is not None else 0
         record = RoundRecord(
             round=t, scenario=cfg.scenario, n_active=len(a),
             n_sources=len(src), n_targets=len(tgt),
@@ -275,7 +286,9 @@ class Executor:
             engine=self.name, solve_age=int(solve_age),
             resolve_reason=reason, n_drifted=int(n_drifted),
             n_dirty_pairs=int(n_dirty_pairs),
-            n_reestimated=int(n_reestimated), **extras)
+            n_reestimated=int(n_reestimated),
+            n_faults=int(n_faults), n_recovered=int(n_recov),
+            resume_count=int(eng._resume_count), **extras)
         row = eng.logger.log(record)
         st.round = t + 1
         return row, record
@@ -370,6 +383,16 @@ class AsyncGossipExecutor(Executor):
         self._ring = np.random.default_rng(cfg.seed + 4).permutation(
             eng.state.pool_size)
 
+    def state_dict(self) -> dict:
+        """The two async RNG streams are the executor's only mutable
+        state (clocks live on NetworkState, the ring is seed-derived)."""
+        return {"clock_rng": self.clock_rng.bit_generator.state,
+                "gossip_rng": self.gossip_rng.bit_generator.state}
+
+    def load_state_dict(self, state: dict):
+        self.clock_rng.bit_generator.state = state["clock_rng"]
+        self.gossip_rng.bit_generator.state = state["gossip_rng"]
+
     # ------------------------------------------------------------- gossip
     def _select_pairs(self, active_idx: np.ndarray) -> List[Tuple[int, int]]:
         """Disjoint gossip meetings among the active devices, drawn from
@@ -449,7 +472,8 @@ class AsyncGossipExecutor(Executor):
         The updates are indexed row writes, not a dense combine: a tick
         touches at most 2*gossip_pairs rows, so mixing through the full
         (P, P) blend matrix would be O(P^2) work for O(pairs) change."""
-        st, cfg = self.engine.state, self.engine.cfg
+        eng = self.engine
+        st, cfg = eng.state, eng.cfg
         used = np.zeros((st.pool_size, st.pool_size))
         blends = []
         for i, j in pairs:
@@ -457,6 +481,13 @@ class AsyncGossipExecutor(Executor):
                 w = st.alpha[s, d]
                 if st.psi[d] == 1.0 and w > cfg.link_thresh:
                     used[s, d] = cfg.gossip_mix * float(w)
+                    if eng.faults is not None \
+                            and eng.faults.drop_exchange():
+                        # payload lost in flight: the sender's energy is
+                        # spent (``used`` keeps the link), the receiver
+                        # never applies the blend — and transmissions
+                        # counts completed exchanges only
+                        continue
                     blends.append((s, d, used[s, d]))
         if blends:
             # sources of solved links have psi=0 and are never blend

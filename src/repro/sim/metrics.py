@@ -61,6 +61,18 @@ scenarios read exactly as before):
   n_reestimated    int    pairs the budgeted refresh re-measured this
                           tick (<= div_budget under div_refresh='dirty')
 
+Fault-tolerance fields (added with the checkpoint/resume + fault
+injection layer; all 0 on fault-free, never-resumed runs):
+  n_faults         int    faults injected this tick (device crashes,
+                          shard losses, transient pool-op failures,
+                          dropped gossip exchanges)
+  n_recovered      int    devices recovered this tick (crash rejoins +
+                          lost-shard devices re-entered through the
+                          churn/reseed path)
+  resume_count     int    how many times this run has been resumed from
+                          a checkpoint (0 on an uninterrupted run;
+                          constant within one process lifetime)
+
 The authoritative field-by-field reference, including which fields are
 nondeterministic, lives in docs/metrics-schema.md (CI checks every
 RoundRecord field is documented there).
@@ -70,10 +82,15 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import warnings
 from typing import IO, List, Optional
 
-# wall-clock / environment-dependent fields, excluded when comparing runs
-NONDETERMINISTIC_FIELDS = ("wall_time_s", "solver_wall_s")
+# fields excluded when comparing runs: wall clocks (environment-
+# dependent) and resume_count (run PROVENANCE — a resumed run must
+# reproduce the uninterrupted trajectory field-for-field except for the
+# counter that says it was resumed)
+NONDETERMINISTIC_FIELDS = ("wall_time_s", "solver_wall_s",
+                           "resume_count")
 
 
 @dataclasses.dataclass
@@ -110,6 +127,10 @@ class RoundRecord:
     n_drifted: int = 0
     n_dirty_pairs: int = 0
     n_reestimated: int = 0
+    # fault-tolerance fields (0 when no faults are injected / no resume)
+    n_faults: int = 0
+    n_recovered: int = 0
+    resume_count: int = 0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -117,14 +138,38 @@ class RoundRecord:
 
 class MetricsLogger:
     """Appends one JSON line per round; ``path=None`` collects in memory
-    only (both modes keep ``records`` for programmatic access)."""
+    only (both modes keep ``records`` for programmatic access).
 
-    def __init__(self, path: Optional[str] = None):
+    Crash consistency: every row is flushed AND fsynced, so after a hard
+    kill (SIGKILL, power loss) the log holds every completed round plus
+    at most one truncated final line — which ``read_jsonl`` tolerates.
+    That makes the log tail trustworthy for ``--resume``.
+
+    ``resume_round``: continue an interrupted run's log in place — the
+    existing file is read back (tolerating a truncated tail), rows from
+    rounds the resumed engine will re-execute (``round >=
+    resume_round``) are dropped, the file is rewritten to exactly the
+    kept prefix, and subsequent ``log`` calls append.  ``records`` is
+    seeded with the kept prefix so a resumed run still returns the FULL
+    stitched history."""
+
+    def __init__(self, path: Optional[str] = None,
+                 resume_round: Optional[int] = None):
         self.path = path
         self.records: List[dict] = []
         self._fh: Optional[IO[str]] = None
-        if path:
-            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        if not path:
+            return
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        if resume_round is not None and os.path.exists(path):
+            kept = [r for r in read_jsonl(path)
+                    if r.get("round", resume_round) < resume_round]
+            with open(path, "w") as f:
+                for row in kept:
+                    f.write(json.dumps(row, default=float) + "\n")
+            self.records = kept
+            self._fh = open(path, "a")
+        else:
             self._fh = open(path, "w")
 
     def log(self, record: RoundRecord) -> dict:
@@ -133,6 +178,7 @@ class MetricsLogger:
         if self._fh:
             self._fh.write(json.dumps(row, default=float) + "\n")
             self._fh.flush()
+            os.fsync(self._fh.fileno())
         return row
 
     def close(self):
@@ -142,8 +188,25 @@ class MetricsLogger:
 
 
 def read_jsonl(path: str) -> List[dict]:
+    """Read a metrics log back.  A truncated FINAL line (the signature
+    of a crash mid-write) is dropped with a warning — the complete
+    prefix is still trustworthy; a malformed line anywhere else is real
+    corruption and raises."""
     with open(path) as f:
-        return [json.loads(line) for line in f if line.strip()]
+        lines = [ln for ln in f if ln.strip()]
+    rows = []
+    for i, ln in enumerate(lines):
+        try:
+            rows.append(json.loads(ln))
+        except json.JSONDecodeError as e:
+            if i == len(lines) - 1:
+                warnings.warn(
+                    f"{path}: dropping truncated final line "
+                    f"({len(ln)} chars) — interrupted write")
+                break
+            raise ValueError(
+                f"{path}: malformed JSONL at line {i + 1}: {e}") from e
+    return rows
 
 
 def strip_nondeterministic(rows: List[dict]) -> List[dict]:

@@ -101,6 +101,40 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--div-prior", type=float, default=1.0,
                    help="solver-input divergence for never-estimated "
                         "pairs (async measures lazily; <=0 disables)")
+    # checkpoint / resume
+    p.add_argument("--checkpoint-every", type=int, default=None,
+                   help="crash-consistent run snapshot every k rounds "
+                        "(default: off)")
+    p.add_argument("--ckpt-dir", default=None,
+                   help="checkpoint directory (default: <out>.ckpt "
+                        "when checkpointing or resuming)")
+    p.add_argument("--ckpt-keep", type=int, default=3,
+                   help="retention: keep the newest k checkpoints")
+    p.add_argument("--resume", action="store_true",
+                   help="continue from the latest readable checkpoint "
+                        "in --ckpt-dir; the resumed run reproduces the "
+                        "uninterrupted trajectory bit-for-bit")
+    p.add_argument("--kill-after", type=int, default=-1,
+                   help="crash-injection test hook: SIGKILL this "
+                        "process after completing (and checkpointing) "
+                        "round k (-1: off)")
+    # fault injection (active under --scenario faulty)
+    p.add_argument("--fault-seed", type=int, default=-1,
+                   help="fault-schedule PRNG seed (-1: seed+5)")
+    p.add_argument("--fault-crash-p", type=float, default=0.15,
+                   help="per-tick device-crash probability")
+    p.add_argument("--fault-rejoin-after", type=int, default=2,
+                   help="outage length of a crashed device, in ticks")
+    p.add_argument("--fault-shard-p", type=float, default=0.1,
+                   help="per-tick shard-loss probability (mesh runs)")
+    p.add_argument("--fault-op-p", type=float, default=0.2,
+                   help="per-tick transient pool-op failure probability")
+    p.add_argument("--fault-gossip-drop-p", type=float, default=0.15,
+                   help="per-exchange gossip model-drop probability "
+                        "(async-gossip)")
+    p.add_argument("--fault-retries", type=int, default=3,
+                   help="bounded-retry budget for transient pool-op "
+                        "failures")
     p.add_argument("--out", default=None,
                    help="JSONL metrics path (default: results/sim/"
                         "<scenario>[-<engine>]-n<devices>-r<rounds>"
@@ -137,6 +171,17 @@ def main(argv=None) -> int:
         resolve_patience=args.resolve_patience,
         div_prior=args.div_prior,
         mesh=args.mesh, train_gather=not args.no_train_gather,
+        checkpoint_every=args.checkpoint_every,
+        ckpt_dir=args.ckpt_dir or (
+            f"{out}.ckpt" if args.checkpoint_every or args.resume
+            else None),
+        ckpt_keep=args.ckpt_keep, resume=args.resume,
+        kill_after=args.kill_after,
+        fault_seed=args.fault_seed, fault_crash_p=args.fault_crash_p,
+        fault_rejoin_after=args.fault_rejoin_after,
+        fault_shard_p=args.fault_shard_p, fault_op_p=args.fault_op_p,
+        fault_gossip_drop_p=args.fault_gossip_drop_p,
+        fault_retries=args.fault_retries,
         log_path=out, verbose=not args.quiet)
     engine = SimulationEngine(cfg)
     rows = engine.run()
@@ -174,6 +219,12 @@ def main(argv=None) -> int:
               f"({reest / max(len(rows), 1):.1f}/tick), "
               f"{drift_resolves} drift-triggered re-solves, "
               f"{rows[-1]['n_dirty_pairs']} dirty pairs at last tick")
+    n_faults = sum(r["n_faults"] for r in rows)
+    n_recovered = sum(r["n_recovered"] for r in rows)
+    if n_faults or n_recovered or (rows and rows[-1]["resume_count"]):
+        print(f"[sim] faults: {n_faults} injected, {n_recovered} "
+              f"devices recovered; resumed "
+              f"{rows[-1]['resume_count'] if rows else 0}x")
     if tgt:
         print(f"[sim] target accuracy: first={tgt[0]:.3f} "
               f"last={tgt[-1]:.3f}; total energy "

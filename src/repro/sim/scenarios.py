@@ -23,6 +23,10 @@ Registered scenarios:
   feature-drift-async
                 feature-drift + occasional clock re-draws — the domain
                 shift regime under the async executor
+  faulty        fault-injection workload (repro.sim.faults): device
+                crashes with later rejoin, shard losses, transient
+                pool-op failures and dropped gossip exchanges on a
+                seeded schedule; the fault_* SimConfig knobs tune it
 
 The clock scenarios mutate device tick rates through
 ``engine.set_tick_period`` and are only meaningful under
@@ -71,6 +75,16 @@ class Scenario:
 
     def step(self, engine, t: int) -> List[dict]:
         return []
+
+    # ---------------------------------------------- checkpoint support
+    def state_dict(self) -> dict:
+        """Scenario-owned mutable state for run checkpoints (base: the
+        RNG stream; subclasses append their own fields).  Must be
+        JSON-serializable — it rides in the checkpoint metadata."""
+        return {"rng": self.rng.bit_generator.state}
+
+    def load_state_dict(self, state: dict):
+        self.rng.bit_generator.state = state["rng"]
 
 
 @register("static")
@@ -187,6 +201,19 @@ class Stragglers(Scenario):
                         self.rng.choice(a, size=k, replace=False)):
             self._straggle(engine, i)
 
+    def state_dict(self):
+        d = super().state_dict()
+        d["stragglers"] = sorted(self.stragglers)
+        d["orig_period"] = {str(k): int(v)
+                            for k, v in self._orig_period.items()}
+        return d
+
+    def load_state_dict(self, state):
+        super().load_state_dict(state)
+        self.stragglers = set(int(i) for i in state["stragglers"])
+        self._orig_period = {int(k): int(v)
+                             for k, v in state["orig_period"].items()}
+
     def step(self, engine, t):
         st = engine.state
         events: List[dict] = []
@@ -235,6 +262,17 @@ class FeatureDrift(Scenario):
         self.mix = {int(d): 0.0 for d in sorted(
             int(i) for i in self.rng.choice(a, size=k, replace=False))}
 
+    def state_dict(self):
+        d = super().state_dict()
+        d["mix"] = {str(k): float(v) for k, v in self.mix.items()}
+        return d
+
+    def load_state_dict(self, state):
+        super().load_state_dict(state)
+        # dict order is part of the trajectory (step() iterates it);
+        # JSON preserves insertion order, so rebuild in the saved order
+        self.mix = {int(k): float(v) for k, v in state["mix"].items()}
+
     def step(self, engine, t):
         events: List[dict] = []
         for d in self.mix:
@@ -269,6 +307,29 @@ class FeatureDriftAsync(FeatureDrift):
         events = super().step(engine, t)
         events.extend(_maybe_retick(self, engine, self.retick_p))
         return events
+
+
+@register("faulty")
+class Faulty(Scenario):
+    """Fault-injection workload (repro.sim.faults): installs a
+    FaultInjector on the engine at setup and advances its seeded
+    schedule every tick — device crashes with later rejoin through the
+    churn/reseed path, shard losses the ShardedPool detects and
+    recovers, transient pool-op failures ridden out with bounded retry,
+    and (async executor) dropped gossip exchanges.  The schedule runs
+    on its own PRNG stream (``fault_seed``, default ``seed + 5``) so
+    the fault pattern is independent of every other scenario draw, and
+    the injector's state is part of the run checkpoint — a resumed
+    faulty run replays the exact same failures."""
+
+    def setup(self, engine):
+        from repro.sim.faults import FaultInjector
+        cfg = self.cfg
+        seed = cfg.fault_seed if cfg.fault_seed >= 0 else cfg.seed + 5
+        engine.faults = FaultInjector(cfg, np.random.default_rng(seed))
+
+    def step(self, engine, t):
+        return engine.faults.begin_tick(engine, t)
 
 
 @register("label-arrival")

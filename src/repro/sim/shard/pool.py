@@ -41,6 +41,7 @@ from repro.fl.divergence import (chunked_pair_lanes,
                                  pairwise_divergence_values)
 from repro.fl.divergence import update_divergences as _update_divergences
 from repro.fl.transfer import apply_transfer
+from repro.sim.faults import PoolFaultError, with_retry
 from repro.sim.training import (mixed_accuracies, network_step,
                                 subset_network_step)
 
@@ -142,6 +143,42 @@ class DevicePool:
     def accuracies(self, params, clients):
         raise NotImplementedError
 
+    # ------------------------------------------------------ fault gate
+    def _fault_gate(self, params):
+        """Consume this tick's injected pool faults before a heavy op
+        (both pools call it entering their training phase — the tick's
+        first pool op).  A lost shard is detected and recovered
+        (backend-specific ``_recover_shard``); transient op failures are
+        ridden out with bounded retry + exponential backoff.  No
+        injector installed -> nothing to consume, zero overhead.
+
+        Takes and returns the params tree: shard recovery re-seeds the
+        lost devices through ``engine.state.params``, and the caller's
+        already-captured argument must not shadow that update."""
+        eng = self.engine
+        inj = eng.faults
+        if inj is None:
+            return params
+        shard = inj.take_lost_shard()
+        if shard is not None:
+            eng.state.params = params
+            self._recover_shard(shard)
+            params = eng.state.params
+        if inj.pending_op_failures > 0:
+            def attempt():
+                if inj.op_attempt_fails():
+                    raise PoolFaultError(
+                        "injected transient pool-op failure")
+            with_retry(attempt, retries=eng.cfg.fault_retries,
+                       backoff_s=eng.cfg.fault_backoff_s)
+        return params
+
+    def _recover_shard(self, shard: int):
+        """Backend hook: bring a lost shard's devices back.  LocalPool
+        is one host with no shards, so the injector never schedules a
+        shard loss against it (``n_shards`` reads 0) and this is never
+        reached; ShardedPool overrides."""
+
     def _values_fn(self):
         """Hook into fl.divergence.estimate_divergences; None = local."""
         return None
@@ -168,6 +205,7 @@ class LocalPool(DevicePool):
 
     def train(self, params, clients, key, active, train_mask=None):
         cfg = self.engine.cfg
+        params = self._fault_gate(params)
         mask = None if train_mask is None else jnp.asarray(train_mask)
         return network_step(params, clients, key, jnp.asarray(active),
                             mask, iters=cfg.train_iters, batch=cfg.batch,
@@ -176,6 +214,7 @@ class LocalPool(DevicePool):
     def train_async(self, params, clients, key, active, elig,
                     eps_prev, acc_prev):
         cfg = self.engine.cfg
+        params = self._fault_gate(params)
         g = np.flatnonzero(np.logical_and(active, elig))
         if not cfg.train_gather:
             # masked full-pool path: every lane computes, ineligible
@@ -281,9 +320,30 @@ class ShardedPool(DevicePool):
             return tree
         return jax.tree_util.tree_map(lambda a: a[:n], tree)
 
+    # ------------------------------------------------- shard membership
+    def shard_devices(self, s: int):
+        """Pool indices shard ``s`` owns (the pool axis is
+        block-partitioned over the padded pool; padded lanes excluded)."""
+        n = self.engine.state.pool_size
+        blk = (n + self._pad(n)) // self.n_shards
+        return list(range(s * blk, min((s + 1) * blk, n)))
+
+    def _recover_shard(self, s: int):
+        """A shard died: its devices' on-device training state is gone,
+        but the host-side NetworkState survives — so instead of killing
+        the run, the shard's ACTIVE devices re-enter through the
+        engine's churn/reseed path (params re-seeded from the solved
+        source mixture, assignment marked dirty for a membership
+        re-solve).  See engine._recover_devices."""
+        devs = [d for d in self.shard_devices(s)
+                if bool(self.engine.state.active[d])]
+        if devs:
+            self.engine._recover_devices(devs, shard=s)
+
     # ------------------------------------------------------------ phases
     def train(self, params, clients, key, active, train_mask=None):
         cfg = self.engine.cfg
+        params = self._fault_gate(params)
         n = clients.n_devices
         pad = self._pad(n)
         keys = jax.random.split(key, n)     # the single-host key stream

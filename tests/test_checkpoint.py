@@ -1,9 +1,14 @@
 """npz pytree checkpointing."""
+import json
+import os
+
 import numpy as np
 import pytest
 
-from repro.checkpoint import latest_step, restore_checkpoint, \
-    save_checkpoint
+from repro.checkpoint import (CheckpointCorruptError, available_steps,
+                              gc_checkpoints, latest_step, load_arrays,
+                              load_metadata, restore_checkpoint,
+                              save_checkpoint)
 
 
 def _tree():
@@ -43,3 +48,86 @@ def test_missing_leaf_raises(tmp_path):
     save_checkpoint(d, 1, {"a": np.zeros((2,))})
     with pytest.raises(KeyError):
         restore_checkpoint(d, {"a": np.zeros((2,)), "b": np.zeros((1,))})
+
+
+# ------------------------------------------- crash consistency + retention
+def _corrupt(d, step):
+    path = os.path.join(d, f"step_{step:08d}.npz")
+    with open(path, "r+b") as f:        # truncate mid-archive
+        f.truncate(os.path.getsize(path) // 2)
+
+
+def test_metadata_sidecar_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 3, _tree(), metadata={"round": 3, "note": "x"})
+    assert load_metadata(d, 3) == {"round": 3, "note": "x"}
+    assert load_metadata(d, 99) is None
+
+
+def test_gc_checkpoints_keeps_newest(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 5, 8):
+        save_checkpoint(d, s, _tree(), metadata={"round": s})
+    deleted = gc_checkpoints(d, keep=2)
+    assert deleted == [1, 2]
+    assert available_steps(d) == [5, 8]
+    # metadata sidecars of the deleted steps are gone too
+    assert load_metadata(d, 1) is None
+    assert load_metadata(d, 5) == {"round": 5}
+    with pytest.raises(ValueError):
+        gc_checkpoints(d, keep=0)
+
+
+def test_corrupt_archive_raises_clear_error(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 4, _tree())
+    _corrupt(d, 4)
+    with pytest.raises(CheckpointCorruptError, match="corrupt or partial"):
+        load_arrays(d, step=4)          # explicit step: never falls back
+    with pytest.raises(CheckpointCorruptError):
+        restore_checkpoint(d, _tree(), step=4)
+
+
+def test_corrupt_latest_falls_back_to_previous(tmp_path):
+    d = str(tmp_path)
+    t = _tree()
+    save_checkpoint(d, 1, t)
+    t2 = {**t, "a": t["a"] + 100.0}
+    save_checkpoint(d, 2, t2)
+    _corrupt(d, 2)
+    with pytest.warns(UserWarning, match="falling back"):
+        step, arrs = load_arrays(d)
+    assert step == 1
+    with pytest.warns(UserWarning, match="falling back"):
+        out = restore_checkpoint(d, t)
+    assert np.allclose(out["a"], t["a"])        # step 1's values
+    with pytest.raises(CheckpointCorruptError):
+        load_arrays(d, fallback=False)
+
+
+def test_all_corrupt_raises(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2):
+        save_checkpoint(d, s, _tree())
+        _corrupt(d, s)
+    with pytest.warns(UserWarning):
+        with pytest.raises(CheckpointCorruptError, match="every checkpoint"):
+            load_arrays(d)
+
+
+def test_corrupt_metadata_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(), metadata={"round": 1})
+    with open(os.path.join(d, "step_00000001.json"), "w") as f:
+        f.write('{"round": 1')          # truncated json
+    with pytest.raises(CheckpointCorruptError, match="metadata"):
+        load_metadata(d, 1)
+
+
+def test_save_is_atomic_no_tmp_left_behind(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree(), metadata={"round": 1})
+    assert not [fn for fn in os.listdir(d) if fn.endswith(".tmp")]
+    # metadata is valid standalone json
+    with open(os.path.join(d, "step_00000001.json")) as f:
+        assert json.load(f)["round"] == 1

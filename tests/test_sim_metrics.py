@@ -32,7 +32,8 @@ def test_nondeterministic_fields_exist_on_record():
     names = {f.name for f in dataclasses.fields(RoundRecord)}
     assert set(NONDETERMINISTIC_FIELDS) <= names
     assert set(NONDETERMINISTIC_FIELDS) == {"wall_time_s",
-                                            "solver_wall_s"}
+                                            "solver_wall_s",
+                                            "resume_count"}
 
 
 def test_roundrecord_jsonl_roundtrip(tmp_path):
@@ -65,6 +66,45 @@ def test_roundtrip_preserves_nan_and_null_fields(tmp_path):
     assert math.isnan(row["mean_target_acc"])
     assert row["trained"] is None and row["gossip"] is None
     assert row["resolve_reason"] is None
+
+
+def test_reader_drops_truncated_final_line(tmp_path):
+    import pytest
+    path = str(tmp_path / "trunc.jsonl")
+    logger = MetricsLogger(path)
+    rows = [logger.log(_record(t)) for t in range(3)]
+    logger.close()
+    with open(path, "a") as f:           # a crash mid-write
+        f.write('{"round": 3, "scenario": "asy')
+    with pytest.warns(UserWarning, match="truncated final line"):
+        back = read_jsonl(path)
+    assert back == rows                  # complete prefix intact
+
+
+def test_reader_raises_on_mid_file_corruption(tmp_path):
+    import pytest
+    path = str(tmp_path / "bad.jsonl")
+    with open(path, "w") as f:
+        f.write('{"round": 0}\n{"rou\n{"round": 2}\n')
+    with pytest.raises(ValueError, match="line 2"):
+        read_jsonl(path)
+
+
+def test_logger_resume_reconciles_existing_log(tmp_path):
+    path = str(tmp_path / "resume.jsonl")
+    logger = MetricsLogger(path)
+    for t in range(5):
+        logger.log(_record(t))
+    logger.close()
+    with open(path, "a") as f:           # plus a torn final line
+        f.write('{"round": 5, "scen')
+    # resume at round 3: rounds 3+ will be re-executed and must go
+    logger = MetricsLogger(path, resume_round=3)
+    assert [r["round"] for r in logger.records] == [0, 1, 2]
+    logger.log(_record(3))
+    logger.log(_record(4))
+    logger.close()
+    assert [r["round"] for r in read_jsonl(path)] == [0, 1, 2, 3, 4]
 
 
 def test_memory_only_logger_keeps_records():
