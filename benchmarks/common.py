@@ -12,10 +12,41 @@ import numpy as np
 RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "results/bench")
 
 
+def host_fingerprint() -> dict:
+    """Provenance stamp for benchmark artifacts: enough to tell whether
+    two BENCH_*.json files were measured on comparable hosts (the trace
+    cost model is wall-clock data — a fit from one box must not be
+    silently compared against walls from another)."""
+    import platform
+    devs = jax.devices()
+    return {
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "jax": jax.__version__,
+        "device_count": len(devs),
+        "device_kind": devs[0].device_kind if devs else "none",
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "cpu_count": os.cpu_count(),
+    }
+
+
 def save_rows(name: str, rows: List[dict]):
+    """Benchmark result artifact: since the trace PR a stamped dict
+    ``{"benchmark", "host_fingerprint", "rows"}`` (read it back with
+    ``load_rows``, which also accepts the older bare-list files)."""
     os.makedirs(RESULTS_DIR, exist_ok=True)
     with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
-        json.dump(rows, f, indent=2, default=float)
+        json.dump({"benchmark": name,
+                   "host_fingerprint": host_fingerprint(),
+                   "rows": rows}, f, indent=2, default=float)
+
+
+def load_rows(path: str) -> List[dict]:
+    """Rows from a benchmark artifact — stamped dict (new) or bare list
+    (pre-fingerprint files still on disk / in git history)."""
+    with open(path) as f:
+        obj = json.load(f)
+    return obj["rows"] if isinstance(obj, dict) else obj
 
 
 def timed(fn: Callable, *args, **kw):

@@ -168,10 +168,12 @@ def main(quick: bool = True, *, write_bench: bool = False):
         raise SystemExit("[sim_scale] FAIL: sharded trajectory diverged "
                          "from mesh-of-1")
     if write_bench:
+        from benchmarks.common import host_fingerprint
         bench = dict(
             benchmark="benchmarks/sim_scale.py",
             host="2-core reference box (see ROADMAP); mesh emulated via "
                  "--xla_force_host_platform_device_count",
+            host_fingerprint=host_fingerprint(),
             settings=dict(scenario="static", seed=0, **LEAN),
             parity="mesh-of-1 vs mesh-of-%d: field-for-field OK" % mesh_n,
             summary=summary, rows=rows)

@@ -1,0 +1,215 @@
+"""Trace -> cost model -> replay accuracy benchmark (+ autotune demo).
+
+The trace subsystem's acceptance test: fit the per-phase cost model on
+traced runs at SMALL network sizes, then predict a LARGER size that was
+never executed during fitting and compare against a measured reference.
+
+Full mode (--full, optionally --write-bench):
+  1. traced static sync runs at N in {16, 32, 64} (the LEAN settings of
+     benchmarks/sim_scale.py, so walls line up with BENCH_scale.json),
+  2. CostModel.fit on the pooled events,
+  3. a measured traced N=128 reference run,
+  4. replay prediction for the N=128 config vs the measurement —
+     round 0 (bootstrap + compile), steady per-round, end-to-end; the
+     end-to-end error must land within +-25%,
+  5. autotune demo: static async-gossip at N=64, where the staleness
+     gate's re-solve cadence is the dominating avoidable cost — the
+     tuner must find a config whose PREDICTED cost beats the hand-set
+     default (resolve_patience 10 -> the guardrail maximum).
+  BENCH_trace.json records events, fitted model, prediction vs
+  measurement, and the autotune result (this is the file
+  repro.sim.trace.model.DEFAULT_BENCH loads).
+
+Quick mode (default): the same pipeline at toy sizes (fit {8, 12},
+predict 16) with a loose factor-2 sanity band — exercises every stage
+without the tens-of-minutes N=128 bootstrap.
+
+Run:  PYTHONPATH=src python -m benchmarks.sim_trace [--full]
+          [--write-bench]
+CI:   PYTHONPATH=src python -m benchmarks.sim_trace --ci
+      (fit on a short run's own trace; replaying the same config must
+      predict its phase-measured wall within a generous 2x band)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO_ROOT, "src"))
+
+from benchmarks.common import host_fingerprint, save_rows  # noqa: E402
+from benchmarks.sim_scale import LEAN  # noqa: E402
+from repro.sim.engine import SimConfig, SimulationEngine  # noqa: E402
+from repro.sim.trace.model import CostModel  # noqa: E402
+from repro.sim.trace.replay import predict_run  # noqa: E402
+from repro.sim.trace.tune import autotune  # noqa: E402
+
+#: end-to-end prediction error bar for the full-mode held-out size
+ERR_BAR = 0.25
+
+
+def _cfg(n: int, rounds: int, **over) -> SimConfig:
+    kw = dict(scenario="static", devices=n, rounds=rounds, seed=0,
+              trace=True, verbose=False, **LEAN)
+    kw.update(over)
+    return SimConfig(**kw)
+
+
+def run_traced(n: int, rounds: int, **over):
+    """One traced run; returns (events, per-round wall seconds)."""
+    eng = SimulationEngine(_cfg(n, rounds, **over))
+    walls = []
+    try:
+        for t in range(rounds):
+            t0 = time.time()
+            eng.step(t)
+            walls.append(time.time() - t0)
+    finally:
+        eng.logger.close()
+        eng.trace.close()
+    return eng.trace.events, walls
+
+
+def _phase_totals(events) -> dict:
+    out: dict = {}
+    for e in events:
+        out[e["phase"]] = out.get(e["phase"], 0.0) + e["seconds"]
+    return out
+
+
+def fit_and_predict(fit_sizes, fit_rounds, predict_n, predict_rounds):
+    """The benchmark core: fit on ``fit_sizes``, measure ``predict_n``
+    (never seen by the fit), compare.  Returns (rows, bench dict)."""
+    events, rows = [], []
+    for n in fit_sizes:
+        evs, walls = run_traced(n, fit_rounds)
+        events += evs
+        steady = (sum(walls[1:]) / len(walls[1:])) if walls[1:] else 0.0
+        rows.append(dict(stage="fit", n=n, rounds=fit_rounds,
+                         round0_s=walls[0], steady_s=steady,
+                         n_events=len(evs)))
+        print(f"[sim_trace] fit n={n}: round0 {walls[0]:.1f}s, "
+              f"steady {steady:.2f}s/round ({len(evs)} events)")
+    model = CostModel.fit(events)
+
+    pred = predict_run(_cfg(predict_n, predict_rounds), model)
+    evs, walls = run_traced(predict_n, predict_rounds)
+    meas_total = sum(walls)
+    meas_steady = (sum(walls[1:]) / len(walls[1:])) if walls[1:] else 0.0
+    err = abs(pred["total_s"] - meas_total) / max(meas_total, 1e-9)
+    rows.append(dict(stage="predict", n=predict_n, rounds=predict_rounds,
+                     predicted_round0_s=pred["round0_s"],
+                     measured_round0_s=walls[0],
+                     predicted_steady_s=pred["steady_mean_s"],
+                     measured_steady_s=meas_steady,
+                     predicted_total_s=pred["total_s"],
+                     measured_total_s=meas_total, err_frac=err))
+    print(f"[sim_trace] predict n={predict_n} (never fitted): "
+          f"round0 {pred['round0_s']:.1f}s pred vs {walls[0]:.1f}s "
+          f"meas; steady {pred['steady_mean_s']:.2f}s vs "
+          f"{meas_steady:.2f}s; end-to-end {pred['total_s']:.1f}s vs "
+          f"{meas_total:.1f}s (err {err * 100:.1f}%)")
+
+    bench = dict(
+        fit_sizes=list(fit_sizes), fit_rounds=fit_rounds,
+        events=events, model=model.to_dict(),
+        prediction=dict(
+            n=predict_n, rounds=predict_rounds,
+            predicted=dict(round0_s=pred["round0_s"],
+                           steady_s=pred["steady_mean_s"],
+                           total_s=pred["total_s"],
+                           phase_totals_s=pred["phase_totals_s"]),
+            measured=dict(round0_s=walls[0], steady_s=meas_steady,
+                          total_s=meas_total,
+                          phase_totals_s=_phase_totals(evs)),
+            err_frac=err))
+    return rows, bench, model
+
+
+def autotune_demo(model: CostModel) -> dict:
+    """Static async-gossip at N=64: the default resolve_patience (10)
+    re-solves 10x more often than the staleness guardrail requires —
+    the tuner must find a cheaper predicted config."""
+    cfg = SimConfig(scenario="static", engine="async-gossip", devices=64,
+                    rounds=100, seed=0, verbose=False, **LEAN)
+    out = autotune(cfg, model)
+    out.update(scenario=cfg.scenario, engine=cfg.engine, n=cfg.devices,
+               rounds=cfg.rounds)
+    print(f"[sim_trace] autotune {cfg.scenario}/{cfg.engine} n=64: "
+          f"{out['knobs']} — predicted {out['predicted_s']:.1f}s vs "
+          f"{out['baseline_s']:.1f}s default")
+    return out
+
+
+def main(quick: bool = True, *, write_bench: bool = False):
+    if quick:
+        rows, bench, model = fit_and_predict([8, 12], 3, 16, 3)
+        err_bar = 1.0                 # toy sizes: sanity band only
+    else:
+        rows, bench, model = fit_and_predict([16, 32, 64], 3, 128, 3)
+        err_bar = ERR_BAR
+    tuned = autotune_demo(model)
+    rows.append(dict(stage="autotune", **{
+        k: tuned[k] for k in ("knobs", "predicted_s", "baseline_s",
+                              "scenario", "engine", "n", "rounds")}))
+
+    err = bench["prediction"]["err_frac"]
+    if err > err_bar:
+        raise SystemExit(f"[sim_trace] FAIL: end-to-end prediction off "
+                         f"by {err * 100:.1f}% (> {err_bar * 100:.0f}%)")
+    if not quick and not (tuned["predicted_s"] < tuned["baseline_s"]
+                          and tuned["knobs"]):
+        raise SystemExit("[sim_trace] FAIL: autotune found nothing "
+                         "cheaper than the hand-set default")
+    if write_bench and not quick:
+        out = dict(benchmark="benchmarks/sim_trace.py",
+                   host="2-core reference box (see ROADMAP)",
+                   host_fingerprint=host_fingerprint(),
+                   settings=dict(scenario="static", seed=0, **LEAN),
+                   err_bar=err_bar, autotune=tuned, **bench)
+        path = os.path.join(REPO_ROOT, "BENCH_trace.json")
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2, default=float)
+        print(f"[sim_trace] wrote {path}")
+    return rows
+
+
+def ci_gate(n: int = 12, rounds: int = 2) -> int:
+    """Self-consistency gate: fit on a short run's own trace, replay
+    the SAME config — the prediction must land within a factor of 2 of
+    the phase-measured wall (generous: CPU contention on the CI box
+    must not flake the gate, a broken fit/walker misses by far more)."""
+    evs, walls = run_traced(n, rounds)
+    model = CostModel.fit(evs)
+    pred = predict_run(_cfg(n, rounds), model)
+    measured = sum(_phase_totals(evs).values())
+    lo, hi = 0.5 * measured, 2.0 * measured
+    ok = lo <= pred["total_s"] <= hi
+    print(f"[sim_trace] ci: predicted {pred['total_s']:.1f}s vs "
+          f"phase-measured {measured:.1f}s (band [{lo:.1f}, {hi:.1f}]) "
+          f"{'OK' if ok else 'FAIL'}")
+    if not ok:
+        print("[sim_trace] FAIL: replay prediction outside the 2x band")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    p = argparse.ArgumentParser()
+    p.add_argument("--full", action="store_true",
+                   help="fit N in {16,32,64}, predict the held-out "
+                        "N=128 (tens of minutes); default is a toy-size "
+                        "pipeline check")
+    p.add_argument("--ci", action="store_true")
+    p.add_argument("--write-bench", action="store_true",
+                   help="with --full: write the repo-root "
+                        "BENCH_trace.json artifact")
+    a = p.parse_args()
+    if a.ci:
+        raise SystemExit(ci_gate())
+    save_rows("sim_trace", main(quick=not a.full,
+                                write_bench=a.write_bench))

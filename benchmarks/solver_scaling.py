@@ -117,11 +117,21 @@ def bench_size(n: int, *, ref_pack: bool, drift_steps: int = 2,
     return row
 
 
-def write_summary(rows):
+def write_summary(rows, notes=None):
+    from benchmarks.common import host_fingerprint
+    path = os.path.join(REPO_ROOT, "BENCH_solver.json")
+    if notes is None:        # re-measuring must not drop recorded
+        try:                 # experiment notes (e.g. the float32
+            with open(path) as f:      # packing decision-parity result)
+                notes = json.load(f).get("notes", [])
+        except (OSError, json.JSONDecodeError):
+            notes = []
     by_n = {r["n"]: r for r in rows}
     summary = {
         "benchmark": "benchmarks/solver_scaling.py",
         "host": "2-core reference box (see ROADMAP)",
+        "host_fingerprint": host_fingerprint(),
+        "notes": notes,
         "solve_settings": {"cold": SOLVE_KW, "warm": WARM_KW},
         "pack_speedup_n64": (by_n.get(64) or {}).get("pack_speedup"),
         "pack_vec_ms_n64": (by_n[64]["pack_vec_s"] * 1e3
@@ -130,7 +140,6 @@ def write_summary(rows):
         "cold_solve_s_n256": (by_n.get(256) or {}).get("cold_s"),
         "rows": rows,
     }
-    path = os.path.join(REPO_ROOT, "BENCH_solver.json")
     with open(path, "w") as f:
         json.dump(summary, f, indent=2, default=float)
     print(f"[solver_scaling] summary -> {path}")

@@ -13,6 +13,14 @@ def load(pattern):
     return out
 
 
+def bench_rows(path):
+    """results/bench artifacts: host-fingerprint-stamped dict (current
+    benchmarks.common.save_rows) or the older bare rows list."""
+    with open(path) as f:
+        obj = json.load(f)
+    return obj["rows"] if isinstance(obj, dict) else obj
+
+
 def fmt_s(x):
     return f"{x:.3e}"
 
@@ -86,7 +94,7 @@ def bench_tables():
         path = f"results/bench/{name}.json"
         if not os.path.exists(path):
             continue
-        rows = json.load(open(path))
+        rows = bench_rows(path)
         out.append(f"**{name}** (target accuracy / normalized energy):\n")
         lines = ["| setting | method | target acc | norm energy |",
                  "|---|---|---|---|"]
@@ -98,7 +106,7 @@ def bench_tables():
         path = f"results/bench/{name}.json"
         if not os.path.exists(path):
             continue
-        rows = json.load(open(path))
+        rows = bench_rows(path)
         out.append("**Table II** (bound tightness):\n")
         lines = ["| setting | LHS (true target err) | RHS Thm2 | RHS Cor1 |",
                  "|---|---|---|---|"]
@@ -108,7 +116,7 @@ def bench_tables():
         out.append("\n".join(lines) + "\n")
     path = "results/bench/fig6.json"
     if os.path.exists(path):
-        rows = json.load(open(path))
+        rows = bench_rows(path)
         out.append("**Fig 6** (phi_E sweep):\n")
         lines = ["| setting | phi_E | norm energy | saved tx |",
                  "|---|---|---|---|"]

@@ -365,26 +365,41 @@ class StructuredProgram(NamedTuple):
 
 def build_structured(prob: STLFProblem) -> StructuredProgram:
     """Structured-form packing of (P): O(n^2) vectorized numpy, no Python
-    loops — the default program construction inside solve_stlf."""
+    loops — the default program construction inside solve_stlf.
+
+    The coefficient tensors are computed in float32 host-side: the
+    device arrays were always float32 (no x64), so packing in the target
+    dtype skips a float64 intermediate per (n,n) buffer; N=64 solve
+    decisions (psi AND alpha) are bitwise identical to the float64
+    packing (benchmarks/solver_scaling.py records the comparison).  The
+    T-floor is the smallest normal float32 (the historical 1e-300
+    underflows to 0 in float32 and would put -inf in the log) — both
+    floors are unreachably-negative sentinels for T = 0."""
     n = prob.n
+    f32 = np.float32
     off = ~np.eye(n, dtype=bool)
     e_mask = off & (prob.energy.K > 0) if prob.phi_e > 0 \
         else np.zeros_like(off)
+    T = np.asarray(prob.T, f32)
+    t_floor = np.finfo(f32).tiny
     return StructuredProgram(
         off=jnp.asarray(off),
-        logS_inv=jnp.asarray(np.log(1.0 / prob.S)),
+        logS_inv=jnp.asarray(np.log(f32(1.0) / np.asarray(prob.S, f32))),
         logT_den=jnp.asarray(np.where(off,
-                                      np.log(np.maximum(prob.T, 1e-300)),
-                                      0.0)),
-        logT_num=jnp.asarray(np.log(np.maximum(prob.T, 1e-9))),
-        log_eps_c=jnp.asarray(np.log(prob.eps_c)),
+                                      np.log(np.maximum(T, t_floor)),
+                                      f32(0.0))),
+        logT_num=jnp.asarray(np.log(np.maximum(T, f32(1e-9)))),
+        log_eps_c=jnp.asarray(np.log(f32(prob.eps_c))),
         e_mask=jnp.asarray(e_mask),
         log_phiK=jnp.asarray(np.where(
-            e_mask, np.log(np.where(e_mask, prob.phi_e * prob.energy.K,
-                                    1.0)), 0.0)),
-        log_eps_e=jnp.asarray(np.log(prob.energy.eps_e)),
-        phi_s=jnp.asarray(float(prob.phi_s)),
-        phi_t=jnp.asarray(float(prob.phi_t)))
+            e_mask,
+            np.log(np.where(e_mask,
+                            f32(prob.phi_e) * np.asarray(prob.energy.K,
+                                                         f32),
+                            f32(1.0))), f32(0.0))),
+        log_eps_e=jnp.asarray(np.log(f32(prob.energy.eps_e))),
+        phi_s=jnp.asarray(f32(prob.phi_s)),
+        phi_t=jnp.asarray(f32(prob.phi_t)))
 
 
 def _views(z, n):

@@ -48,6 +48,7 @@ from repro.sim.metrics import MetricsLogger
 from repro.sim.scenarios import get_scenario
 from repro.sim.shard.pool import make_pool
 from repro.sim.state import NetworkState
+from repro.sim.trace.events import TraceRecorder
 
 
 @dataclasses.dataclass
@@ -202,6 +203,21 @@ class SimConfig:
     fault_retries: int = 3
     #: base of the exponential retry backoff, seconds (0: no sleeping)
     fault_backoff_s: float = 0.0
+    # ---- trace subsystem (repro.sim.trace)
+    #: record per-phase wall-clock events (train / divergence /
+    #: transfer / solve / eval / checkpoint) into the RoundRecord
+    #: ``*_wall_s`` fields; off by default — tracing-off runs are
+    #: bit-for-bit the pre-trace engine (no PRNG use, no extra
+    #: device synchronization)
+    trace: bool = False
+    #: optional standalone JSONL trace file for the recorded events
+    #: (the cost-model fit input; requires ``trace=True``)
+    trace_path: Optional[str] = None
+    #: floor of the power-of-two bucket widths the async subset-gather
+    #: training step compiles for (LocalPool; the autotuner's "gather
+    #: bucket size" knob).  Width choice never changes per-lane values,
+    #: only batch padding, so this is trajectory-preserving
+    train_gather_floor: int = 4
     log_path: Optional[str] = None
     verbose: bool = False
 
@@ -253,6 +269,13 @@ class SimConfig:
         if self.fault_retries < 0:
             raise ValueError(f"fault_retries must be >= 0, got "
                              f"{self.fault_retries}")
+        if self.trace_path and not self.trace:
+            raise ValueError(
+                "trace_path is set but trace=False — enable tracing "
+                "or drop the path")
+        if self.train_gather_floor < 1:
+            raise ValueError(f"train_gather_floor must be >= 1, got "
+                             f"{self.train_gather_floor}")
 
 
 class SimulationEngine:
@@ -303,6 +326,10 @@ class SimulationEngine:
         self.faults = None
         #: how many times this run has been resumed from a checkpoint
         self._resume_count = 0
+        #: per-phase wall-clock recorder (repro.sim.trace) — a no-op
+        #: unless cfg.trace; constructed before the pool/executor so
+        #: both can reference it unconditionally
+        self.trace = TraceRecorder(cfg)
         self.pool = make_pool(self)
         self.executor = get_executor(cfg.engine)(self)
         self.executor.setup()
@@ -562,8 +589,13 @@ class SimulationEngine:
             return
         from repro.checkpoint import gc_checkpoints
         from repro.sim.snapshot import save_run
+        t0 = self.trace.start()
         save_run(self, step)
         gc_checkpoints(cfg.ckpt_dir, keep=cfg.ckpt_keep)
+        # the record for the round just completed is already emitted, so
+        # this lands in the NEXT round's ckpt_wall_s (documented)
+        self.trace.stop("checkpoint", t0,
+                        n_devices=self.state.pool_size)
         if cfg.verbose:
             print(f"[sim] checkpointed step {step} -> {cfg.ckpt_dir}")
 
@@ -586,4 +618,5 @@ class SimulationEngine:
                     os.kill(os.getpid(), signal.SIGKILL)
         finally:
             self.logger.close()
+            self.trace.close()
         return self.logger.records

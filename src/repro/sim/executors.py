@@ -118,6 +118,7 @@ class Executor:
         Returns (tick start time, scenario events)."""
         eng = self.engine
         t0 = time.time()
+        eng.trace.begin_tick(t)
         events = eng.scenario.step(eng, t)
         if eng._restack:
             eng.state.clients = stack_clients(eng.state.pool)
@@ -190,6 +191,9 @@ class Executor:
         ema = np.where(
             np.logical_and(st.div_known[pi, pj], ~st.div_dirty[pi, pj]),
             cfg.div_ema, 0.0)
+        # annotate the pool's divergence event with the dirty backlog —
+        # only the executor knows it (a no-op when tracing is off)
+        eng.trace.with_ctx(n_dirty=len(dirty))
         st.div_hat = eng.pool.refresh_divergences(
             st.div_hat, st.clients, None, pairs, ema=ema,
             keys=self._pair_content_keys(pairs), h0=self._refresh_h0())
@@ -239,6 +243,9 @@ class Executor:
         warm = eng.state.solver is not None
         res = eng._solve(a)
         eng._install_solution(a, res, t)
+        # the solver measures itself; feed the trace stream directly
+        # (solve keeps its own solver_wall_s field, no WALL_FIELDS entry)
+        eng.trace.add("solve", res.solve_time_s, n_devices=len(a))
         return warm, res.outer_iters, res.solve_time_s
 
     def _link_churn(self) -> float:
@@ -288,7 +295,11 @@ class Executor:
             n_dirty_pairs=int(n_dirty_pairs),
             n_reestimated=int(n_reestimated),
             n_faults=int(n_faults), n_recovered=int(n_recov),
-            resume_count=int(eng._resume_count), **extras)
+            resume_count=int(eng._resume_count),
+            # per-phase wall totals popped from the trace accumulators
+            # ({} when tracing is off -> the fields keep their 0.0
+            # defaults and golden rows are byte-identical)
+            **eng.trace.tick_wall_fields(), **extras)
         row = eng.logger.log(record)
         st.round = t + 1
         return row, record
@@ -474,6 +485,7 @@ class AsyncGossipExecutor(Executor):
         (P, P) blend matrix would be O(P^2) work for O(pairs) change."""
         eng = self.engine
         st, cfg = eng.state, eng.cfg
+        t0 = eng.trace.start()
         used = np.zeros((st.pool_size, st.pool_size))
         blends = []
         for i, j in pairs:
@@ -501,6 +513,10 @@ class AsyncGossipExecutor(Executor):
                 return out
 
             st.params = jax.tree_util.tree_map(mix, st.params)
+        # async has no global mixture phase; the gossip exchange IS its
+        # transfer, so it lands in the same trace phase/wall field
+        eng.trace.stop("transfer", t0, block=st.params,
+                       n_devices=st.pool_size)
         return used, len(blends)
 
     # --------------------------------------------------------------- tick

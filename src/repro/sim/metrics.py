@@ -73,6 +73,18 @@ injection layer; all 0 on fault-free, never-resumed runs):
                           a checkpoint (0 on an uninterrupted run;
                           constant within one process lifetime)
 
+Per-phase wall clocks (trace subsystem, repro.sim.trace; all 0.0 unless
+``SimConfig.trace`` is on, and all nondeterministic):
+  train_wall_s     float  wall seconds in the pool's training phase
+  div_wall_s       float  wall seconds in Algorithm-1 estimation
+                          (bootstrap + gossip + budgeted refresh)
+  transfer_wall_s  float  wall seconds in transfer (sync alpha-mixture /
+                          async gossip model exchanges)
+  eval_wall_s      float  wall seconds in the accuracy sweep
+  ckpt_wall_s      float  wall seconds checkpointing — the PREVIOUS
+                          round's snapshot (the engine checkpoints after
+                          a round's record is emitted)
+
 The authoritative field-by-field reference, including which fields are
 nondeterministic, lives in docs/metrics-schema.md (CI checks every
 RoundRecord field is documented there).
@@ -86,11 +98,14 @@ import warnings
 from typing import IO, List, Optional
 
 # fields excluded when comparing runs: wall clocks (environment-
-# dependent) and resume_count (run PROVENANCE — a resumed run must
-# reproduce the uninterrupted trajectory field-for-field except for the
-# counter that says it was resumed)
+# dependent, including the per-phase walls the trace subsystem fills
+# when SimConfig.trace is on) and resume_count (run PROVENANCE — a
+# resumed run must reproduce the uninterrupted trajectory
+# field-for-field except for the counter that says it was resumed)
 NONDETERMINISTIC_FIELDS = ("wall_time_s", "solver_wall_s",
-                           "resume_count")
+                           "train_wall_s", "div_wall_s",
+                           "transfer_wall_s", "eval_wall_s",
+                           "ckpt_wall_s", "resume_count")
 
 
 @dataclasses.dataclass
@@ -131,6 +146,15 @@ class RoundRecord:
     n_faults: int = 0
     n_recovered: int = 0
     resume_count: int = 0
+    # per-phase wall clocks (trace subsystem; 0.0 unless SimConfig.trace
+    # is on — all nondeterministic.  ckpt_wall_s carries the PREVIOUS
+    # round's checkpoint: the engine snapshots after a round's record is
+    # already emitted)
+    train_wall_s: float = 0.0
+    div_wall_s: float = 0.0
+    transfer_wall_s: float = 0.0
+    eval_wall_s: float = 0.0
+    ckpt_wall_s: float = 0.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)

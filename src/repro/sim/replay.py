@@ -1,0 +1,13 @@
+"""``python -m repro.sim.replay`` — what-if wall-time prediction.
+
+Thin entry point for the trace subsystem's replay walker; the
+implementation (and the library API ``predict_run``) lives in
+``repro.sim.trace.replay``.
+"""
+from repro.sim.trace.replay import build_parser, main, predict_run
+
+__all__ = ["build_parser", "main", "predict_run"]
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

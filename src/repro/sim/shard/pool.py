@@ -58,13 +58,16 @@ def make_pool(engine: "SimulationEngine") -> "DevicePool":
     return ShardedPool(engine, n) if n > 0 else LocalPool(engine)
 
 
-def _bucket(n: int, cap: int) -> int:
-    """Smallest power-of-two >= n (floor 4), capped at the pool size —
-    the static widths the compact subset step compiles for."""
-    w = 4
+def _bucket(n: int, cap: int, floor: int = 4) -> int:
+    """Smallest power-of-two >= n (configurable floor, default 4),
+    capped at the pool size — the static widths the compact subset step
+    compiles for.  The floor is the ``SimConfig.train_gather_floor``
+    autotuner knob on the training path: a higher floor trades padded
+    lanes for fewer distinct compiled widths."""
+    w = max(1, int(floor))
     while w < n:
         w *= 2
-    return min(w, cap)
+    return max(1, min(w, cap))
 
 
 def _gather_pair_rows(clients, pi, pj, width_for):
@@ -103,22 +106,44 @@ class DevicePool:
     def __init__(self, engine: "SimulationEngine"):
         self.engine = engine
 
+    # The public phase methods are TEMPLATE METHODS: they bracket the
+    # backend implementation (``_train`` / ``_train_async`` /
+    # ``_transfer`` / ``_accuracies``) with the engine's TraceRecorder —
+    # start/stop collapse to attribute reads when tracing is off, and
+    # ``stop(..., block=out)`` blocks on the phase outputs when it is
+    # on, so async dispatch cannot attribute one phase's device time to
+    # the next.  Backends override ONLY the underscored hooks.
+
     # -- full/masked training step (sync round; async masked fallback)
     def train(self, params, clients, key, active, train_mask=None):
-        raise NotImplementedError
+        t0 = self.engine.trace.start()
+        out = self._train(params, clients, key, active, train_mask)
+        self.engine.trace.stop("train", t0, block=out,
+                               n_devices=clients.n_devices)
+        return out
 
     # -- async tick: refresh params/eps/acc for the eligible lanes only
     def train_async(self, params, clients, key, active, elig,
                     eps_prev, acc_prev):
-        raise NotImplementedError
+        t0 = self.engine.trace.start()
+        out = self._train_async(params, clients, key, active, elig,
+                                eps_prev, acc_prev)
+        self.engine.trace.stop("train", t0, block=out,
+                               n_devices=clients.n_devices)
+        return out
 
     def update_divergences(self, div, clients, key, pairs, *, ema=0.0,
                            keys=None, h0=None):
         cfg = self.engine.cfg
-        return _update_divergences(
+        t0 = self.engine.trace.start()
+        out = _update_divergences(
             div, clients, key, pairs, tau=cfg.div_tau, T=cfg.div_T,
             batch=cfg.batch, lr=cfg.lr, ema=ema,
             values_fn=self._values_fn(), keys=keys, h0=h0)
+        self.engine.trace.stop("divergence", t0, block=out,
+                               n_devices=clients.n_devices,
+                               n_pairs=len(pairs))
+        return out
 
     def refresh_divergences(self, div, clients, key, pairs, *, ema=0.0,
                             keys=None, h0=None):
@@ -132,15 +157,42 @@ class DevicePool:
         the pool (the bootstrap).  ``keys``/``h0`` forward the
         content-addressed-key override (see estimate_divergences)."""
         cfg = self.engine.cfg
-        return _update_divergences(
+        t0 = self.engine.trace.start()
+        out = _update_divergences(
             div, clients, key, pairs, tau=cfg.div_tau, T=cfg.div_T,
             batch=cfg.batch, lr=cfg.lr, ema=ema,
             values_fn=self._targeted_values_fn(), keys=keys, h0=h0)
+        self.engine.trace.stop("divergence", t0, block=out,
+                               n_devices=clients.n_devices,
+                               n_pairs=len(pairs))
+        return out
 
     def transfer(self, params, alpha, psi):
-        raise NotImplementedError
+        t0 = self.engine.trace.start()
+        out = self._transfer(params, alpha, psi)
+        self.engine.trace.stop("transfer", t0, block=out,
+                               n_devices=len(psi))
+        return out
 
     def accuracies(self, params, clients):
+        t0 = self.engine.trace.start()
+        out = self._accuracies(params, clients)
+        self.engine.trace.stop("eval", t0, block=out,
+                               n_devices=clients.n_devices)
+        return out
+
+    # -------------------------------------------------- backend hooks
+    def _train(self, params, clients, key, active, train_mask=None):
+        raise NotImplementedError
+
+    def _train_async(self, params, clients, key, active, elig,
+                     eps_prev, acc_prev):
+        raise NotImplementedError
+
+    def _transfer(self, params, alpha, psi):
+        raise NotImplementedError
+
+    def _accuracies(self, params, clients):
         raise NotImplementedError
 
     # ------------------------------------------------------ fault gate
@@ -203,7 +255,7 @@ class LocalPool(DevicePool):
 
     name = "local"
 
-    def train(self, params, clients, key, active, train_mask=None):
+    def _train(self, params, clients, key, active, train_mask=None):
         cfg = self.engine.cfg
         params = self._fault_gate(params)
         mask = None if train_mask is None else jnp.asarray(train_mask)
@@ -211,17 +263,18 @@ class LocalPool(DevicePool):
                             mask, iters=cfg.train_iters, batch=cfg.batch,
                             lr=cfg.lr)
 
-    def train_async(self, params, clients, key, active, elig,
-                    eps_prev, acc_prev):
+    def _train_async(self, params, clients, key, active, elig,
+                     eps_prev, acc_prev):
         cfg = self.engine.cfg
         params = self._fault_gate(params)
         g = np.flatnonzero(np.logical_and(active, elig))
         if not cfg.train_gather:
             # masked full-pool path: every lane computes, ineligible
             # results are discarded (the pre-subset-gather behavior,
-            # kept as the parity reference)
-            params, eps, acc = self.train(params, clients, key, active,
-                                          elig)
+            # kept as the parity reference; _train, not train — the
+            # template wrapper already timed this call)
+            params, eps, acc = self._train(params, clients, key, active,
+                                           elig)
             eps_out, acc_out = self._merge_measured(
                 g, np.asarray(eps, float)[g], np.asarray(acc, float)[g],
                 eps_prev, acc_prev)
@@ -233,7 +286,11 @@ class LocalPool(DevicePool):
         # have had in the masked step, so per-device results are bitwise
         # identical — only the no-op lanes disappear
         keys = jax.random.split(key, clients.n_devices)
-        w = _bucket(len(g), clients.n_devices)
+        w = _bucket(len(g), clients.n_devices,
+                    cfg.train_gather_floor)
+        # the trace's train event should carry the COMPACT batch width,
+        # not the mesh-derived lane count — the cost model keys on it
+        self.engine.trace.with_ctx(lanes=w)
         gpad = np.concatenate([g, np.full(w - len(g), g[0], g.dtype)])
         gj = jnp.asarray(gpad)
         sub = lambda a: a[gj]                                 # noqa: E731
@@ -251,11 +308,11 @@ class LocalPool(DevicePool):
             eps_prev, acc_prev)
         return params, eps_out, acc_out
 
-    def transfer(self, params, alpha, psi):
+    def _transfer(self, params, alpha, psi):
         return apply_transfer(params, jnp.asarray(alpha),
                               jnp.asarray(psi))
 
-    def accuracies(self, params, clients):
+    def _accuracies(self, params, clients):
         return mixed_accuracies(params, clients)
 
     def _targeted_values_fn(self):
@@ -341,7 +398,7 @@ class ShardedPool(DevicePool):
             self.engine._recover_devices(devs, shard=s)
 
     # ------------------------------------------------------------ phases
-    def train(self, params, clients, key, active, train_mask=None):
+    def _train(self, params, clients, key, active, train_mask=None):
         cfg = self.engine.cfg
         params = self._fault_gate(params)
         n = clients.n_devices
@@ -356,14 +413,15 @@ class ShardedPool(DevicePool):
             jnp.asarray(self._pad_mask(mask, pad)))
         return self._unpad_tree(out, n, pad), eps[:n], acc[:n]
 
-    def train_async(self, params, clients, key, active, elig,
-                    eps_prev, acc_prev):
+    def _train_async(self, params, clients, key, active, elig,
+                     eps_prev, acc_prev):
         # under SPMD the masked lanes are free (they run on the shards
         # that own them either way), so the sharded pool keeps the
         # one-call masked step rather than a gather whose indices would
         # change the compiled program every tick
         g = np.flatnonzero(np.logical_and(active, elig))
-        params, eps, acc = self.train(params, clients, key, active, elig)
+        params, eps, acc = self._train(params, clients, key, active,
+                                       elig)
         eps_out, acc_out = self._merge_measured(
             g, np.asarray(eps, float)[g], np.asarray(acc, float)[g],
             eps_prev, acc_prev)
@@ -410,7 +468,7 @@ class ShardedPool(DevicePool):
                                       call, pad_partial=True)
         return values
 
-    def transfer(self, params, alpha, psi):
+    def _transfer(self, params, alpha, psi):
         n = len(psi)
         pad = self._pad(n)
         a = np.asarray(alpha, np.float32)
@@ -422,7 +480,7 @@ class ShardedPool(DevicePool):
                                 jnp.asarray(a), jnp.asarray(s))
         return self._unpad_tree(out, n, pad)
 
-    def accuracies(self, params, clients):
+    def _accuracies(self, params, clients):
         n = clients.n_devices
         pad = self._pad(n)
         return self._acc_fn(self._pad_tree(params, pad),

@@ -63,6 +63,12 @@ SNAPSHOT_VERSION = 1
 RESUME_EXEMPT_CFG = frozenset({
     "rounds", "log_path", "verbose", "resume", "kill_after",
     "checkpoint_every", "ckpt_dir", "ckpt_keep", "fault_backoff_s",
+    # trace instrumentation is observation-only (zero PRNG, wall clocks
+    # are nondeterministic fields) — a resume may turn it on or off
+    # freely; train_gather_floor stays NON-exempt: it changes compiled
+    # batch widths, which is trajectory-identical in exact arithmetic
+    # but not something a resumed golden comparison should gamble on
+    "trace", "trace_path",
 })
 
 

@@ -1,0 +1,133 @@
+"""TraceRecorder: per-phase wall-clock events for the simulator.
+
+The recorder is the instrumentation layer of the trace subsystem: both
+executors and both pool backends bracket their heavy phases with
+``start()`` / ``stop()`` (or report an externally-measured duration via
+``add()``), and each completed phase becomes one structured event::
+
+    {"phase": "train", "tick": 3, "n_devices": 64, "mesh": 0,
+     "n_pairs": null, "seconds": 1.98, ...}
+
+Events serve two consumers:
+
+  - per-tick accumulators surface into the JSONL metrics log as the
+    ``*_wall_s`` RoundRecord fields (``tick_wall_fields``, popped by the
+    executors' ``_emit``) — nondeterministic fields, stripped from every
+    determinism comparison;
+  - the raw event stream feeds the cost-model fit
+    (``repro.sim.trace.model``), in memory via ``events`` and optionally
+    as a standalone JSONL trace file (``SimConfig.trace_path``).
+
+Design constraints, load-bearing for golden parity:
+
+  - ZERO PRNG consumption: only ``time.perf_counter`` is ever read.
+  - Disabled (``SimConfig.trace=False``, the default) every method is an
+    early-returning no-op — in particular no ``jax.block_until_ready``
+    is issued, so dispatch/overlap behavior is byte-identical to the
+    pre-trace engine.  Enabled, ``stop(..., block=out)`` blocks on the
+    phase's outputs so async dispatch cannot attribute one phase's
+    device time to the next.
+  - Checkpoint timing: the engine checkpoints AFTER a round's record is
+    emitted, so a ``checkpoint`` phase accumulates into the NEXT tick's
+    ``ckpt_wall_s`` (documented in docs/metrics-schema.md; the field is
+    nondeterministic either way).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import IO, List, Optional
+
+#: trace phase -> the RoundRecord wall field its per-tick total lands in
+#: (``solve`` is traced too but keeps its pre-existing ``solver_wall_s``
+#: field, filled by the executors from SolverResult.solve_time_s)
+WALL_FIELDS = {
+    "train": "train_wall_s",
+    "divergence": "div_wall_s",
+    "transfer": "transfer_wall_s",
+    "eval": "eval_wall_s",
+    "checkpoint": "ckpt_wall_s",
+}
+
+PHASES = ("train", "divergence", "transfer", "solve", "eval",
+          "checkpoint")
+
+
+class TraceRecorder:
+    """Per-phase wall-clock recording; a no-op unless ``cfg.trace``."""
+
+    def __init__(self, cfg):
+        self.enabled = bool(getattr(cfg, "trace", False))
+        self.mesh = int(getattr(cfg, "mesh", 0) or 0)
+        self.events: List[dict] = []
+        self.tick = 0
+        self._acc = {}                   # phase -> seconds this tick
+        self._pending_ctx = {}           # merged into the next event
+        self._fh: Optional[IO[str]] = None
+        path = getattr(cfg, "trace_path", None)
+        if self.enabled and path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "w")
+
+    # ------------------------------------------------------------ timing
+    def start(self) -> Optional[float]:
+        """Phase entry: a perf_counter stamp, or None when disabled (the
+        disabled fast path is this one attribute read)."""
+        return time.perf_counter() if self.enabled else None
+
+    def stop(self, phase: str, t0: Optional[float], *, block=None,
+             **ctx):
+        """Phase exit: ``t0`` is ``start()``'s return — None means the
+        recorder is disabled and this returns immediately.  ``block``
+        (any pytree) is passed to ``jax.block_until_ready`` first so the
+        measured interval covers the phase's actual device work."""
+        if t0 is None:
+            return
+        if block is not None:
+            import jax
+            jax.block_until_ready(block)
+        self.add(phase, time.perf_counter() - t0, **ctx)
+
+    def add(self, phase: str, seconds: float, **ctx):
+        """Record one completed phase (externally-measured durations —
+        e.g. the solver's own solve_time_s — enter here directly)."""
+        if not self.enabled:
+            return
+        self._acc[phase] = self._acc.get(phase, 0.0) + float(seconds)
+        event = {"phase": phase, "tick": int(self.tick),
+                 "mesh": self.mesh, "seconds": float(seconds)}
+        if self._pending_ctx:
+            event.update(self._pending_ctx)
+            self._pending_ctx = {}
+        event.update(ctx)
+        self.events.append(event)
+        if self._fh is not None:
+            self._fh.write(json.dumps(event, default=float) + "\n")
+            self._fh.flush()
+
+    def with_ctx(self, **ctx):
+        """Attach context the caller knows but the timed layer does not
+        (e.g. the executor's dirty-pair count for the pool's refresh
+        event); merged into the NEXT recorded event only."""
+        if self.enabled:
+            self._pending_ctx.update(ctx)
+
+    # ------------------------------------------------- per-tick surface
+    def begin_tick(self, t: int):
+        self.tick = int(t)
+
+    def tick_wall_fields(self) -> dict:
+        """Pop this tick's per-phase totals as RoundRecord field values
+        ({} when disabled, so the fields keep their 0.0 defaults)."""
+        if not self.enabled:
+            return {}
+        out = {field: self._acc.pop(phase, 0.0)
+               for phase, field in WALL_FIELDS.items()}
+        self._acc.clear()
+        return out
+
+    def close(self):
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None

@@ -31,9 +31,9 @@ def _record(t=0, **kw):
 def test_nondeterministic_fields_exist_on_record():
     names = {f.name for f in dataclasses.fields(RoundRecord)}
     assert set(NONDETERMINISTIC_FIELDS) <= names
-    assert set(NONDETERMINISTIC_FIELDS) == {"wall_time_s",
-                                            "solver_wall_s",
-                                            "resume_count"}
+    assert set(NONDETERMINISTIC_FIELDS) == {
+        "wall_time_s", "solver_wall_s", "train_wall_s", "div_wall_s",
+        "transfer_wall_s", "eval_wall_s", "ckpt_wall_s", "resume_count"}
 
 
 def test_roundrecord_jsonl_roundtrip(tmp_path):

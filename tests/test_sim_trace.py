@@ -1,0 +1,328 @@
+"""Trace subsystem: recorder semantics, cost-model fit determinism,
+golden parity with tracing enabled, replay/autotune behavior, and the
+committed BENCH_trace.json fixture (refit + replay reproduce it)."""
+import json
+import os
+import types
+
+import numpy as np
+import pytest
+
+from repro.sim.engine import SimConfig, SimulationEngine
+from repro.sim.metrics import strip_nondeterministic
+from repro.sim.trace.events import PHASES, WALL_FIELDS, TraceRecorder
+from repro.sim.trace.model import (CostModel, bench_scale_events,
+                                   phase_features, read_trace)
+from repro.sim.trace.replay import predict_run
+from repro.sim.trace.replay import main as replay_main
+from repro.sim.trace.tune import (PATIENCE_MAX, PATIENCE_MIN, autotune,
+                                  min_budget)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_TRACE = os.path.join(REPO_ROOT, "BENCH_trace.json")
+
+#: small-but-real engine settings (the LEAN profile of benchmarks)
+SMOKE = dict(samples_per_device=8, train_iters=2, div_tau=1, div_T=2,
+             batch=4, solver_max_outer=2, solver_inner_steps=120,
+             resolve_threshold=10.0)
+
+
+def _rec(trace=True, trace_path=None, mesh=0):
+    cfg = types.SimpleNamespace(trace=trace, trace_path=trace_path,
+                                mesh=mesh)
+    return TraceRecorder(cfg)
+
+
+# ------------------------------------------------------------- recorder
+def test_recorder_disabled_is_noop():
+    rec = _rec(trace=False)
+    assert rec.start() is None
+    rec.stop("train", None, n_devices=8)      # must not record
+    rec.add("train", 1.0)
+    rec.with_ctx(lanes=4)
+    assert rec.events == []
+    assert rec.tick_wall_fields() == {}       # fields keep 0.0 defaults
+
+
+def test_recorder_accumulates_and_pops_per_tick():
+    rec = _rec()
+    rec.begin_tick(0)
+    rec.add("train", 0.5, n_devices=8)
+    rec.add("train", 0.25, n_devices=8)
+    rec.add("divergence", 0.1, n_pairs=28)
+    fields = rec.tick_wall_fields()
+    assert fields["train_wall_s"] == pytest.approx(0.75)
+    assert fields["div_wall_s"] == pytest.approx(0.1)
+    assert fields["transfer_wall_s"] == 0.0
+    # popped: the next tick starts clean
+    assert rec.tick_wall_fields()["train_wall_s"] == 0.0
+    assert [e["phase"] for e in rec.events] == ["train", "train",
+                                                "divergence"]
+    assert rec.events[2]["n_pairs"] == 28 and rec.events[0]["tick"] == 0
+
+
+def test_recorder_ctx_merges_into_next_event_only():
+    rec = _rec()
+    rec.with_ctx(n_dirty=5, lanes=8)
+    rec.add("divergence", 0.2, n_pairs=5)
+    rec.add("divergence", 0.2, n_pairs=5)
+    assert rec.events[0]["n_dirty"] == 5 and rec.events[0]["lanes"] == 8
+    assert "n_dirty" not in rec.events[1]
+
+
+def test_recorder_stop_timing_and_trace_file(tmp_path):
+    path = str(tmp_path / "trace.jsonl")
+    rec = _rec(trace_path=path)
+    t0 = rec.start()
+    assert t0 is not None
+    rec.stop("eval", t0, n_devices=4)
+    rec.close()
+    back = read_trace(path)
+    assert len(back) == 1 and back[0]["phase"] == "eval"
+    assert back[0]["seconds"] >= 0.0 and back[0]["n_devices"] == 4
+    assert back == rec.events
+
+
+def test_every_wall_field_phase_is_a_known_phase():
+    assert set(WALL_FIELDS) < set(PHASES)
+    assert "solve" in PHASES and "solve" not in WALL_FIELDS
+
+
+def test_engine_cfg_validation():
+    with pytest.raises(ValueError):
+        SimConfig(devices=4, rounds=1, trace_path="x.jsonl")  # no trace
+    with pytest.raises(ValueError):
+        SimConfig(devices=4, rounds=1, train_gather_floor=0)
+
+
+# ------------------------------------------------------------ cost model
+def _synthetic_events():
+    """Known linear costs: train 0.05*lanes + 0.2 (tick-0 pays +3.0 jit),
+    divergence 0.01*pairs + 0.1, solve 0.02*n + 0.5."""
+    evs = []
+    for tick in range(3):
+        for n in (8, 16, 32):
+            extra = 3.0 if tick == 0 else 0.0
+            evs.append({"phase": "train", "tick": tick, "mesh": 0,
+                        "n_devices": n, "seconds": 0.05 * n + 0.2 + extra})
+            pairs = n * (n - 1) // 2
+            evs.append({"phase": "divergence", "tick": tick, "mesh": 0,
+                        "n_devices": n, "n_pairs": pairs,
+                        "seconds": 0.01 * pairs + 0.1})
+            evs.append({"phase": "solve", "tick": tick, "mesh": 0,
+                        "n_devices": n, "seconds": 0.02 * n + 0.5})
+    return evs
+
+
+def test_fit_recovers_known_linear_costs():
+    model = CostModel.fit(_synthetic_events())
+    tr = model.phases["train"]
+    assert tr["coef"] == pytest.approx([0.05, 0.2], abs=1e-9)
+    assert tr["first_extra"] == pytest.approx(3.0, abs=1e-9)
+    dv = model.phases["divergence"]
+    assert dv["coef"] == pytest.approx([0.01, 0.1], abs=1e-9)
+    assert dv["first_extra"] == pytest.approx(0.0, abs=1e-9)
+    # prediction matches the generator exactly
+    got = model.predict("train", {"n_devices": 64, "mesh": 0})
+    assert got == pytest.approx(0.05 * 64 + 0.2)
+    got0 = model.predict("train", {"n_devices": 64, "mesh": 0},
+                         first=True)
+    assert got0 == pytest.approx(0.05 * 64 + 0.2 + 3.0)
+    # unseen phase predicts 0, not KeyError
+    assert model.predict("checkpoint", {"n_devices": 64}) == 0.0
+
+
+def test_fit_is_deterministic_and_roundtrips():
+    evs = _synthetic_events()
+    a, b = CostModel.fit(evs), CostModel.fit(evs)
+    assert a.to_dict() == b.to_dict()
+    back = CostModel.from_dict(json.loads(json.dumps(a.to_dict())))
+    assert back.to_dict() == a.to_dict()
+
+
+def test_negative_slope_is_clamped():
+    # seconds DECREASE with the feature: the slope must clamp to 0 and
+    # the intercept absorb the mean (never a negative prediction)
+    evs = [{"phase": "train", "tick": 1, "mesh": 0, "n_devices": n,
+            "seconds": 2.0 - 0.01 * n} for n in (8, 16, 32, 64)]
+    model = CostModel.fit(evs)
+    coef = model.phases["train"]["coef"]
+    assert coef[0] == 0.0 and coef[1] > 0
+    assert model.predict("train", {"n_devices": 4096, "mesh": 0}) > 0
+
+
+def test_phase_features_lanes_override_and_mesh():
+    # mesh-derived lanes: ceil(64 / 8) = 8
+    f = phase_features("train", {"n_devices": 64, "mesh": 8})
+    assert f[0] == 8
+    # explicit lanes (async subset-gather bucket) wins over mesh
+    f = phase_features("train", {"n_devices": 64, "mesh": 8, "lanes": 16})
+    assert f[0] == 16
+    f = phase_features("transfer", {"n_devices": 64, "mesh": 8})
+    assert f[0] == 64 * 8
+
+
+def test_bench_scale_events_tolerates_both_schemas(tmp_path):
+    rows = [{"dry": True, "phase": "train", "n": 256, "mesh": 8,
+             "steady_s": 1.5},
+            {"dry": True, "phase": "divergence_64pairs", "n": 256,
+             "mesh": 8, "steady_s": 0.4},
+            {"dry": False, "phase": "train", "n": 256, "steady_s": 9.9}]
+    bare, stamped = tmp_path / "a.json", tmp_path / "b.json"
+    bare.write_text(json.dumps(rows))
+    stamped.write_text(json.dumps({"benchmark": "x", "rows": rows}))
+    for path in (bare, stamped):
+        evs = bench_scale_events(str(path))
+        assert len(evs) == 2                     # wet row filtered out
+        assert evs[0]["phase"] == "train" and evs[0]["n_devices"] == 256
+        assert evs[1]["phase"] == "divergence" and evs[1]["n_pairs"] == 64
+
+
+# ---------------------------------------------------------- golden parity
+def test_trace_on_off_golden_parity(tmp_path):
+    """The recorder consumes no PRNG: deterministic fields are
+    byte-identical with tracing on vs off (sync engine)."""
+    kw = dict(scenario="channel-drift", devices=6, rounds=2, seed=0,
+              verbose=False, **SMOKE)
+    runs = []
+    for trace in (False, True):
+        eng = SimulationEngine(SimConfig(trace=trace, **kw))
+        rows = eng.run()
+        runs.append(strip_nondeterministic(rows))
+        if trace:
+            assert eng.trace.events, "tracing on but no events recorded"
+            walls = [r for r in rows if r["train_wall_s"] > 0]
+            assert walls, "traced run has no train wall clocks"
+    assert json.dumps(runs[0], sort_keys=True) == \
+        json.dumps(runs[1], sort_keys=True)
+
+
+# ----------------------------------------------------------------- replay
+def test_replay_is_deterministic_and_scales():
+    model = CostModel.fit(_synthetic_events())
+    cfg = SimConfig(scenario="static", devices=64, rounds=5, seed=0,
+                    verbose=False, **SMOKE)
+    a, b = predict_run(cfg, model), predict_run(cfg, model)
+    assert a == b
+    assert a["total_s"] == pytest.approx(
+        sum(r["total_s"] for r in a["per_round"]))
+    # round 0 carries the all-pairs bootstrap + first_extra: strictly
+    # more expensive than a steady round
+    assert a["round0_s"] > a["steady_mean_s"]
+    # bigger networks predict longer walls under positive slopes
+    big = predict_run(SimConfig(scenario="static", devices=128, rounds=5,
+                                seed=0, verbose=False, **SMOKE), model)
+    assert big["total_s"] > a["total_s"]
+
+
+def test_replay_drift_budget_moves_divergence_load():
+    model = CostModel.fit(_synthetic_events())
+    kw = dict(scenario="feature-drift", devices=32, rounds=6, seed=0,
+              verbose=False, feature_drift_p=0.5, feature_drift_frac=0.25,
+              feature_drift_step=0.25, **SMOKE)
+    full = predict_run(SimConfig(div_budget=-1, **kw), model)
+    tight = predict_run(SimConfig(div_budget=4, **kw), model)
+    assert tight["phase_totals_s"]["divergence"] < \
+        full["phase_totals_s"]["divergence"]
+
+
+def test_replay_cli_fits_a_jsonl_trace(tmp_path, capsys):
+    path = str(tmp_path / "t.jsonl")
+    with open(path, "w") as f:
+        for e in _synthetic_events():
+            f.write(json.dumps(e) + "\n")
+    rc = replay_main(["--scenario", "static", "--n", "32", "--rounds",
+                      "3", "--model", path])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "end-to-end" in out and "WARNING" in out  # no transfer/eval fit
+
+
+# --------------------------------------------------------------- autotune
+def test_autotune_never_worse_and_respects_guardrails():
+    model = CostModel.fit(_synthetic_events())
+    cfg = SimConfig(scenario="static", engine="async-gossip", devices=64,
+                    rounds=50, seed=0, verbose=False, **SMOKE)
+    out = autotune(cfg, model)
+    assert out["predicted_s"] <= out["baseline_s"]
+    assert out["n_candidates"] > 1
+    pat = out["knobs"].get("resolve_patience")
+    if pat is not None:
+        assert PATIENCE_MIN <= pat <= PATIENCE_MAX
+    # mesh never extrapolates beyond the fitted meshes by default
+    mesh = out["knobs"].get("mesh")
+    assert mesh is None or mesh in model.known_meshes() | {cfg.mesh}
+
+
+def test_autotune_budget_floor_covers_drift_rate():
+    model = CostModel.fit(_synthetic_events())
+    cfg = SimConfig(scenario="feature-drift", devices=32, rounds=20,
+                    seed=0, verbose=False, feature_drift_p=0.5,
+                    feature_drift_frac=0.25, feature_drift_step=0.25,
+                    **SMOKE)
+    floor = min_budget(cfg)
+    assert floor > 0
+    out = autotune(cfg, model)
+    b = out["knobs"].get("div_budget", cfg.div_budget)
+    eff = cfg.devices if b == -1 else \
+        (cfg.devices * (cfg.devices - 1) // 2 if b == 0 else b)
+    assert eff >= floor, "tuned budget starves the drift refresh"
+    assert out["min_div_budget"] == floor
+
+
+# ------------------------------------------------- committed BENCH fixture
+needs_bench = pytest.mark.skipif(
+    not os.path.exists(BENCH_TRACE),
+    reason="BENCH_trace.json not generated yet (benchmarks/sim_trace "
+           "--full --write-bench)")
+
+
+@needs_bench
+def test_bench_trace_fixture_refit_matches_committed_model():
+    with open(BENCH_TRACE) as f:
+        bench = json.load(f)
+    refit = CostModel.fit(bench["events"])
+    committed = CostModel.from_bench(BENCH_TRACE)
+    assert set(refit.phases) == set(committed.phases)
+    for phase, spec in committed.phases.items():
+        assert refit.phases[phase]["coef"] == \
+            pytest.approx(spec["coef"], rel=1e-9, abs=1e-12)
+
+
+@needs_bench
+def test_bench_trace_fixture_replay_reproduces_prediction():
+    from benchmarks.sim_trace import _cfg
+    with open(BENCH_TRACE) as f:
+        bench = json.load(f)
+    pred_rec = bench["prediction"]
+    model = CostModel.from_bench(BENCH_TRACE)
+    pred = predict_run(_cfg(pred_rec["n"], pred_rec["rounds"]), model)
+    assert pred["total_s"] == pytest.approx(
+        pred_rec["predicted"]["total_s"], rel=1e-6)
+    assert pred["round0_s"] == pytest.approx(
+        pred_rec["predicted"]["round0_s"], rel=1e-6)
+    # the committed held-out measurement landed inside the error bar
+    assert pred_rec["err_frac"] <= bench["err_bar"]
+    # and the committed autotune demo beat the hand-set default
+    tuned = bench["autotune"]
+    assert tuned["knobs"] and tuned["predicted_s"] < tuned["baseline_s"]
+
+
+# ------------------------------------------------------- bench artifacts
+def test_save_rows_stamped_and_load_rows_tolerant(tmp_path, monkeypatch):
+    import benchmarks.common as common
+    monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+    rows = [{"n": 8, "s": 1.0}]
+    common.save_rows("probe", rows)
+    path = str(tmp_path / "probe.json")
+    with open(path) as f:
+        obj = json.load(f)
+    assert obj["benchmark"] == "probe" and obj["rows"] == rows
+    fp = obj["host_fingerprint"]
+    assert fp["jax"] and fp["device_count"] >= 1
+    assert common.load_rows(path) == rows
+    # old bare-list artifacts still load
+    bare = str(tmp_path / "old.json")
+    with open(bare, "w") as f:
+        json.dump(rows, f)
+    assert common.load_rows(bare) == rows
